@@ -1,0 +1,87 @@
+"""§Perf hillclimb cell 3: the compiled Free Join engine itself (the
+paper-representative pair). Wall-clock on CPU (the join engine is the one
+component that genuinely runs here), jit-compiled, excluding compile:
+triangle count over zipf-skewed edges.
+
+Iterations (hypothesis -> change -> measure, EXPERIMENTS.md §Perf):
+  J0 baseline            capacities 4M, probe budget 32
+  J1 probe budget 8      probe loop is 32 unrolled gather+compare rounds;
+                         load factor <= 0.5 => clusters are short; 8 rounds
+                         should cut probe work ~4x if probes dominate
+  J2 tight capacities    right-size frontier buffers from cardinality
+                         estimates (expansion + mask work scales with
+                         capacity, not with live rows)
+  J3 J1+J2 combined
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import timeit
+from repro.core import binary2fj, factor
+from repro.core.compiled import make_count_fn
+from repro.relational.relation import Relation
+from repro.relational.schema import triangle_query
+
+
+def _data(n=200_000, dom=30_000, seed=0):
+    rng = np.random.default_rng(seed)
+    q = triangle_query()
+    rels = {}
+    for a in q.atoms:
+        z = ((rng.zipf(1.5, n) - 1) % dom)
+        perm = rng.permutation(dom)
+        rels[a.alias] = Relation(
+            a.alias, {a.vars[0]: perm[z], a.vars[1]: rng.integers(0, dom, n)}
+        )
+    return q, rels
+
+
+def _run(q, rels, caps, budget, repeats=3):
+    import jax.numpy as jnp
+
+    fj = factor(binary2fj(q.atoms, q))
+    fn = jax.jit(make_count_fn(fj, caps, impl="jnp", budget=budget))
+    cols = {
+        a.alias: {v: jnp.asarray(rels[a.alias].columns[v], jnp.int32) for v in a.vars}
+        for a in q.atoms
+    }
+    count, ovf = fn(cols)  # compile + 1st run
+    assert not bool(ovf), "capacity overflow"
+    t, _ = timeit(lambda: jax.block_until_ready(fn(cols)), repeats=repeats, warmup=1)
+    return t, int(count)
+
+
+def run(repeats: int = 3):
+    q, rels = _data()
+    rows = []
+    # J0
+    t0, c0 = _run(q, rels, [1 << 22] * 4, 32, repeats)
+    rows.append({"name": "joinperf.J0_baseline", "us": t0 * 1e6, "derived": f"count={c0}"})
+    # J1: probe budget 8
+    t1, c1 = _run(q, rels, [1 << 22] * 4, 8, repeats)
+    assert c1 == c0
+    rows.append({"name": "joinperf.J1_budget8", "us": t1 * 1e6,
+                 "derived": f"speedup_vs_J0={t0 / t1:.2f}x"})
+    # J2: tight capacities (estimate-sized, x2 safety)
+    caps = [1 << 19, 1 << 21, 1 << 21, 1 << 21]
+    t2, c2 = _run(q, rels, caps, 32, repeats)
+    assert c2 == c0
+    rows.append({"name": "joinperf.J2_tight_caps", "us": t2 * 1e6,
+                 "derived": f"speedup_vs_J0={t0 / t2:.2f}x"})
+    # J3: both
+    t3, c3 = _run(q, rels, caps, 8, repeats)
+    assert c3 == c0
+    rows.append({"name": "joinperf.J3_combined", "us": t3 * 1e6,
+                 "derived": f"speedup_vs_J0={t0 / t3:.2f}x"})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks (not a paper table): the jnp path timed on CPU,
+the Pallas path validated in interpret mode (TPU is the target; interpret
+timing is not meaningful). Also times the compiled static-shape engine vs
+the eager engine on the triangle query."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.kernels import ops
+
+
+def run(repeats: int = 5):
+    rows = []
+    rng = np.random.default_rng(0)
+    for n, q in ((10_000, 100_000), (100_000, 1_000_000)):
+        keys = np.unique(rng.integers(0, 2**30, (n + n // 2, 2)).astype(np.int32), axis=0)[:n]
+        table = ops.build_table(jnp.asarray(keys))
+        queries = jnp.asarray(
+            np.vstack(
+                [keys[rng.integers(0, n, q // 2)], rng.integers(2**30, 2**31 - 1, (q // 2, 2)).astype(np.int32)]
+            )
+        )
+        probe = jax.jit(lambda t, qq: ops.probe(t, qq))
+        probe(table, queries).block_until_ready()
+        t, _ = timeit(lambda: probe(table, queries).block_until_ready(), repeats)
+        rows.append(
+            {
+                "name": f"kern.hash_probe.n{n}.q{q}",
+                "us": t * 1e6,
+                "derived": f"{q / t / 1e6:.1f}Mprobe/s",
+            }
+        )
+        tb, _ = timeit(lambda: jax.block_until_ready(ops.build_table(jnp.asarray(keys))), repeats)
+        rows.append(
+            {"name": f"kern.build_table.n{n}", "us": tb * 1e6, "derived": f"{n / tb / 1e6:.1f}Mkey/s"}
+        )
+    a = jnp.asarray(np.sort(rng.integers(0, 2**30, 100_000).astype(np.int32)))
+    b = jnp.asarray(np.sort(np.unique(rng.integers(0, 2**30, 100_000).astype(np.int32))))
+    isect = jax.jit(lambda x, y: ops.intersect_sorted(x, y))
+    jax.block_until_ready(isect(a, b))
+    t, _ = timeit(lambda: jax.block_until_ready(isect(a, b)), repeats)
+    rows.append({"name": "kern.intersect.100k", "us": t * 1e6, "derived": f"{len(a) / t / 1e6:.1f}Mkey/s"})
+
+    # compiled static engine vs eager engine (triangle count)
+    from repro.core import binary2fj, factor, free_join
+    from repro.core.compiled import count_query
+    from repro.relational.relation import Relation
+    from repro.relational.schema import triangle_query
+
+    qy = triangle_query()
+    rels = {
+        a_.alias: Relation(a_.alias, {v: rng.integers(0, 300, 20_000) for v in a_.vars})
+        for a_ in qy.atoms
+    }
+    fj = factor(binary2fj(qy.atoms, qy))
+    te, ce = timeit(lambda: free_join(qy, rels, agg="count"), repeats)
+    caps = [1 << 22] * 4
+    tc, (cc, ovf) = timeit(lambda: count_query(fj, rels, caps), 2)
+    assert ce == cc and not ovf, (ce, cc)
+    rows.append(
+        {
+            "name": "kern.triangle20k.eager_vs_compiled",
+            "us": te * 1e6,
+            "derived": f"compiled_us={tc * 1e6:.0f};count={ce}",
+        }
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,61 @@
+"""Fig. 15/20 reproduction: robustness to bad plans.
+
+The optimizer's cardinality estimator is pinned to 1 (the paper's hijack),
+which degenerates join ordering to input order and emits bushy trees that
+materialize large intermediates. We compare each algorithm's slowdown
+bad/good. Paper: relative order FJ < BJ (fastest) persists; FJ and BJ both
+slow down substantially, GJ least (it was slowest to begin with)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timeit
+from benchmarks.datagen import job_queries, job_tables
+from repro.core import binary_join, free_join, generic_join, optimize
+
+
+def run(scale: float = 0.05, repeats: int = 1):
+    rows = []
+    tables = job_tables(scale)
+    slowdowns = {"fj": [], "bj": [], "gj": []}
+    for name, q, rels in job_queries(tables):
+        if name == "q_clover_adv":
+            continue  # bad-plan binary join on the adversarial instance is unbounded
+        good = optimize(q, rels, bad=False)
+        bad = optimize(q, rels, bad=True)
+        res = {}
+        for lbl, fn in (
+            ("fj", lambda p: free_join(q, rels, p, agg="count")),
+            ("bj", lambda p: binary_join(q, rels, p, agg="count")),
+            ("gj", lambda p: generic_join(q, rels, plan_tree=p, agg="count")),
+        ):
+            tg, cg = timeit(lambda f=fn: f(good), repeats, warmup=0)
+            tb, cb = timeit(lambda f=fn: f(bad), repeats, warmup=0)
+            assert cg == cb, (name, lbl)
+            res[lbl] = (tg, tb)
+            slowdowns[lbl].append(tb / tg)
+        rows.append(
+            {
+                "name": f"robust.{name}",
+                "us": res["fj"][0] * 1e6,
+                "derived": ";".join(
+                    f"{lbl}_bad/good={tb / tg:.2f}x" for lbl, (tg, tb) in res.items()
+                )
+                + f";fastest_bad={'fj' if res['fj'][1] <= min(res['bj'][1], res['gj'][1]) else ('bj' if res['bj'][1] < res['gj'][1] else 'gj')}",
+            }
+        )
+    gm = lambda v: float(np.exp(np.mean(np.log(v))))  # noqa: E731
+    rows.append(
+        {
+            "name": "robust.geomean_slowdown",
+            "us": 0.0,
+            "derived": ";".join(f"{lbl}={gm(v):.2f}x" for lbl, v in slowdowns.items()),
+        }
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

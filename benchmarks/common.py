@@ -1,0 +1,30 @@
+"""Benchmark harness utilities: best-of-N timing, CSV emission."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, repeats: int = 3, warmup: int = 1):
+    """Best-of-N wall time in seconds; returns (best_s, result)."""
+    result = None
+    for _ in range(warmup):
+        result = fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def emit(rows: list[dict], path: str | None = None):
+    """Print `name,us_per_call,derived` CSV; optionally write to path."""
+    lines = ["name,us_per_call,derived"]
+    for r in rows:
+        lines.append(f"{r['name']},{r['us']:.1f},{r.get('derived', '')}")
+    text = "\n".join(lines)
+    print(text)
+    if path:
+        with open(path, "w") as f:
+            f.write(text + "\n")
+    return text

@@ -1,0 +1,319 @@
+"""Synthetic datasets mirroring the paper's benchmarks.
+
+JOB (Join Order Benchmark) ships the IMDB dump and LSQB generates a social
+network — neither is available offline, so we generate data with the same
+*shape characteristics* the paper's analysis hinges on:
+  * JOB-like: a star schema around `title` with several many-to-many
+    satellite tables whose foreign keys are Zipf-skewed (the paper's Q13a
+    bottleneck: 3 m2m joins on one attribute exploding to 1e8 rows under a
+    binary plan — our q_star3 reproduces that clover pattern).
+  * LSQB-like: person-knows-person graph with Zipf degrees + attribute
+    tables; q1-q5 mirror LSQB's mix (cyclic triangle / cyclic with
+    attributes / 4-cycle / star / path).
+Queries are full CQs (selections prepushed, aggregation = COUNT or full
+materialization outside the timer, as in Sec 5.1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.relational.relation import Relation
+from repro.relational.schema import Atom, Query
+
+
+def _zipf(rng, n, domain, a=1.3):
+    """Zipf-skewed foreign keys with an independent permutation of the
+    domain per call: each table has heavy hitters, but *different* ones
+    (shared heavy keys with a small final output is covered separately by
+    q_clover_adv, the paper's Fig. 3 instance)."""
+    z = rng.zipf(a, n)
+    perm = rng.permutation(domain)
+    return perm[(z - 1) % domain].astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# JOB-like
+# ---------------------------------------------------------------------------
+
+
+def job_tables(scale: float = 1.0, seed: int = 0) -> dict[str, Relation]:
+    rng = np.random.default_rng(seed)
+    n_title = int(50_000 * scale)
+    n_m2m = int(120_000 * scale)
+    n_person = int(30_000 * scale)
+    n_company = max(50, int(2_000 * scale))
+    n_keyword = max(100, int(5_000 * scale))
+
+    title = Relation(
+        "title",
+        {
+            "t": np.arange(n_title, dtype=np.int64),
+            "kind": rng.integers(0, 7, n_title),
+            "year": rng.integers(1950, 2020, n_title),
+        },
+    )
+    cast_info = Relation(
+        "cast_info",
+        {
+            "t": _zipf(rng, n_m2m, n_title),
+            "p": _zipf(rng, n_m2m, n_person),
+            "role": rng.integers(0, 11, n_m2m),
+        },
+    )
+    movie_companies = Relation(
+        "movie_companies",
+        {
+            "t": _zipf(rng, n_m2m // 2, n_title),
+            "c": _zipf(rng, n_m2m // 2, n_company),
+        },
+    )
+    movie_keyword = Relation(
+        "movie_keyword",
+        {
+            "t": _zipf(rng, n_m2m, n_title),
+            "k": _zipf(rng, n_m2m, n_keyword),
+        },
+    )
+    movie_info = Relation(
+        "movie_info",
+        {
+            "t": _zipf(rng, n_m2m // 2, n_title),
+            "info": rng.integers(0, 110, n_m2m // 2),
+        },
+    )
+    person = Relation(
+        "person",
+        {"p": np.arange(n_person, dtype=np.int64), "gender": rng.integers(0, 3, n_person)},
+    )
+    company = Relation(
+        "company",
+        {"c": np.arange(n_company, dtype=np.int64), "country": rng.integers(0, 50, n_company)},
+    )
+    keyword = Relation(
+        "keyword", {"k": np.arange(n_keyword, dtype=np.int64), "kw_type": rng.integers(0, 5, n_keyword)}
+    )
+    return {
+        "title": title,
+        "cast_info": cast_info,
+        "movie_companies": movie_companies,
+        "movie_keyword": movie_keyword,
+        "movie_info": movie_info,
+        "person": person,
+        "company": company,
+        "keyword": keyword,
+    }
+
+
+def _sel(rel: Relation, col: str, pred) -> Relation:
+    return rel.select(pred(np.asarray(rel.columns[col])))
+
+
+def job_queries(tables: dict[str, Relation]):
+    """(name, Query, relations) triples. Selections are pre-pushed."""
+    t, ci, mc, mk, mi = (
+        tables["title"],
+        tables["cast_info"],
+        tables["movie_companies"],
+        tables["movie_keyword"],
+        tables["movie_info"],
+    )
+    person, company, keyword = tables["person"], tables["company"], tables["keyword"]
+    out = []
+
+    # q_chain4: title -> cast_info -> person (chain with filters)
+    q = Query(
+        [
+            Atom("title", ("t", "kind")),
+            Atom("cast_info", ("t", "p", "role")),
+            Atom("person", ("p", "gender")),
+        ]
+    )
+    rels = {
+        "title": _sel(t, "year", lambda y: y >= 2000).rename({}, "title"),
+        "cast_info": ci,
+        "person": person,
+    }
+    rels["title"] = Relation("title", {"t": rels["title"].columns["t"], "kind": rels["title"].columns["kind"]})
+    out.append(("q_chain3", q, rels))
+
+    # q_star4_m2m (Q13a-like): 3 many-to-many joins on t + a selective
+    # satellite that prunes. Under skew-blind estimates a binary plan can
+    # order the m2m joins first and explode; Free Join factors the probes
+    # into the first node (clover form) and never expands the m2m product.
+    q = Query(
+        [
+            Atom("cast_info", ("t", "p")),
+            Atom("movie_keyword", ("t", "k")),
+            Atom("movie_companies", ("t", "c")),
+            Atom("movie_info", ("t", "info")),
+        ]
+    )
+    rels = {
+        "cast_info": Relation("cast_info", {"t": ci.columns["t"], "p": ci.columns["p"]}),
+        "movie_keyword": mk,
+        "movie_companies": mc,
+        "movie_info": _sel(mi, "info", lambda i: i == 3),
+    }
+    out.append(("q_star4_m2m", q, rels))
+
+    # q_star4: star with a selective filter on one satellite
+    q = Query(
+        [
+            Atom("title", ("t", "year")),
+            Atom("movie_info", ("t", "info")),
+            Atom("movie_keyword", ("t", "k")),
+            Atom("keyword", ("k", "kw_type")),
+        ]
+    )
+    rels = {
+        "title": Relation("title", {"t": t.columns["t"], "year": t.columns["year"]}),
+        "movie_info": _sel(mi, "info", lambda i: i == 3),
+        "movie_keyword": mk,
+        "keyword": _sel(keyword, "kw_type", lambda i: i == 2),
+    }
+    out.append(("q_star4_sel", q, rels))
+
+    # q_chain5: company -> movie_companies -> title -> cast_info -> person
+    q = Query(
+        [
+            Atom("company", ("c", "country")),
+            Atom("movie_companies", ("t", "c")),
+            Atom("title", ("t", "kind")),
+            Atom("cast_info", ("t", "p")),
+            Atom("person", ("p", "gender")),
+        ]
+    )
+    rels = {
+        "company": _sel(company, "country", lambda x: x < 5),
+        "movie_companies": mc,
+        "title": Relation("title", {"t": t.columns["t"], "kind": t.columns["kind"]}),
+        "cast_info": Relation("cast_info", {"t": ci.columns["t"], "p": ci.columns["p"]}),
+        "person": person,
+    }
+    out.append(("q_chain5", q, rels))
+
+    # q_star5_wide: everything joined on t (wide clover)
+    q = Query(
+        [
+            Atom("title", ("t", "kind")),
+            Atom("cast_info", ("t", "p")),
+            Atom("movie_keyword", ("t", "k")),
+            Atom("movie_companies", ("t", "c")),
+            Atom("movie_info", ("t", "info")),
+        ]
+    )
+    rels = {
+        "title": _sel(Relation("title", {"t": t.columns["t"], "kind": t.columns["kind"]}), "kind", lambda k: k == 1),
+        "cast_info": Relation("cast_info", {"t": ci.columns["t"], "p": ci.columns["p"]}),
+        "movie_keyword": mk,
+        "movie_companies": mc,
+        "movie_info": _sel(mi, "info", lambda i: i < 2),
+    }
+    out.append(("q_star5_wide", q, rels))
+
+    # q_clover_adv: the paper's adversarial clover instance (Fig. 3/4),
+    # n = 2000: every pairwise join has n^2 tuples but the full join has
+    # exactly one. Any binary plan materializes n^2; Free Join runs O(n).
+    n = 2000
+    ar = np.arange(n, dtype=np.int64)
+    R = Relation("R", {"x": np.concatenate([[0], np.full(n, 1), np.full(n, 2)]),
+                       "va": np.concatenate([[0], ar, ar + n])})
+    S = Relation("S", {"x": np.concatenate([[0], np.full(n, 2), np.full(n, 3)]),
+                       "vb": np.concatenate([[0], ar, ar + n])})
+    T = Relation("T", {"x": np.concatenate([[0], np.full(n, 3), np.full(n, 1)]),
+                       "vc": np.concatenate([[0], ar, ar + n])})
+    q = Query([Atom("R", ("x", "va")), Atom("S", ("x", "vb")), Atom("T", ("x", "vc"))])
+    out.append(("q_clover_adv", q, {"R": R, "S": S, "T": T}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LSQB-like
+# ---------------------------------------------------------------------------
+
+
+def lsqb_tables(sf: float = 0.1, seed: int = 1) -> dict[str, Relation]:
+    rng = np.random.default_rng(seed)
+    n_person = int(30_000 * sf) + 100
+    n_knows = int(180_000 * sf) + 200
+    n_tag = max(20, int(1_000 * sf))
+    n_city = max(10, int(500 * sf))
+    src = _zipf(rng, n_knows, n_person, a=1.4)
+    dst = _zipf(rng, n_knows, n_person, a=1.4)
+    knows = Relation("knows", {"a": src, "b": dst})
+    interest = Relation(
+        "interest",
+        {"a": _zipf(rng, 3 * n_person, n_person), "tag": _zipf(rng, 3 * n_person, n_tag)},
+    )
+    located = Relation(
+        "located",
+        {"a": np.arange(n_person, dtype=np.int64), "city": rng.integers(0, n_city, n_person)},
+    )
+    return {"knows": knows, "interest": interest, "located": located}
+
+
+def lsqb_queries(tables: dict[str, Relation]):
+    knows, interest, located = tables["knows"], tables["interest"], tables["located"]
+    k_ab = knows
+    out = []
+    # q1: triangle (cyclic)
+    q = Query([Atom("knows", ("a", "b"), "K1"), Atom("knows", ("b", "c"), "K2"), Atom("knows", ("c", "a"), "K3")])
+    rels = {
+        "K1": k_ab,
+        "K2": k_ab.rename({"a": "b", "b": "c"}),
+        "K3": k_ab.rename({"a": "c", "b": "a"}),
+    }
+    out.append(("q1_triangle", q, rels))
+    # q2: triangle + interest (cyclic + attribute)
+    q = Query(
+        [
+            Atom("knows", ("a", "b"), "K1"),
+            Atom("knows", ("b", "c"), "K2"),
+            Atom("knows", ("c", "a"), "K3"),
+            Atom("interest", ("a", "tag"), "I"),
+        ]
+    )
+    rels = {
+        "K1": k_ab,
+        "K2": k_ab.rename({"a": "b", "b": "c"}),
+        "K3": k_ab.rename({"a": "c", "b": "a"}),
+        "I": interest,
+    }
+    out.append(("q2_triangle_tag", q, rels))
+    # q3: 4-cycle (many cycles)
+    q = Query(
+        [
+            Atom("knows", ("a", "b"), "K1"),
+            Atom("knows", ("b", "c"), "K2"),
+            Atom("knows", ("c", "d"), "K3"),
+            Atom("knows", ("d", "a"), "K4"),
+        ]
+    )
+    rels = {
+        "K1": k_ab,
+        "K2": k_ab.rename({"a": "b", "b": "c"}),
+        "K3": k_ab.rename({"a": "c", "b": "d"}),
+        "K4": k_ab.rename({"a": "d", "b": "a"}),
+    }
+    out.append(("q3_square", q, rels))
+    # q4: star (acyclic)
+    q = Query(
+        [
+            Atom("knows", ("a", "b"), "K1"),
+            Atom("interest", ("a", "tag"), "I"),
+            Atom("located", ("a", "city"), "L"),
+        ]
+    )
+    rels = {"K1": k_ab, "I": interest, "L": located}
+    out.append(("q4_star", q, rels))
+    # q5: path of length 3 (acyclic)
+    q = Query(
+        [
+            Atom("knows", ("a", "b"), "K1"),
+            Atom("knows", ("b", "c"), "K2"),
+            Atom("located", ("c", "city"), "L"),
+        ]
+    )
+    rels = {"K1": k_ab, "K2": k_ab.rename({"a": "b", "b": "c"}), "L": located.rename({"a": "c"})}
+    out.append(("q5_path", q, rels))
+    return out

@@ -1,0 +1,36 @@
+"""Benchmark suite entry point: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (and an aggregate at the end).
+
+  PYTHONPATH=src python -m benchmarks.run [--only job,lsqb,...]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+from benchmarks.common import emit
+
+SUITES = ["job", "lsqb", "colt", "vectorization", "robustness", "kernels", "join_perf"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+    picks = args.only.split(",") if args.only else SUITES
+    all_rows = []
+    for name in picks:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        print(f"# --- {name} ---", file=sys.stderr, flush=True)
+        rows = mod.run()
+        print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr, flush=True)
+        all_rows.extend(rows)
+    os.makedirs("benchmarks/results", exist_ok=True)
+    emit(all_rows, path="benchmarks/results/latest.csv")
+
+
+if __name__ == "__main__":
+    main()

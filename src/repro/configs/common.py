@@ -1,0 +1,74 @@
+"""Arch spec plumbing shared by all 10 assigned architecture configs.
+
+Each config module exposes `spec() -> ArchSpec`. The full ModelConfig is
+exercised only via the dry-run (ShapeDtypeStruct, no allocation); smoke
+tests instantiate `reduced()`.
+
+Shapes (assigned, LM family — seq_len x global_batch):
+  train_4k     4,096 x 256   train_step
+  prefill_32k  32,768 x 32   serve prefill (full-sequence forward)
+  decode_32k   32,768 x 128  serve decode (1 new token, KV cache = seq_len)
+  long_500k    524,288 x 1   long-context decode; sub-quadratic archs only
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+SHAPES: dict[str, tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    model: ModelConfig
+    reduced: ModelConfig
+    opt_dtype: str = "float32"  # Adam moment dtype (bf16 for the >=398B archs)
+    modality: str = "text"  # text | vlm | audio (stub frontends)
+    long_context_ok: bool = False  # sub-quadratic => long_500k eligible
+    notes: str = ""
+
+    def shape_supported(self, shape: str) -> bool:
+        if shape == "long_500k":
+            return self.long_context_ok
+        return shape in SHAPES
+
+    def input_specs(self, shape: str) -> dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of `shape`
+        (weak-type-correct, shardable, no device allocation)."""
+        seq, batch, kind = SHAPES[shape]
+        cfg = self.model
+        if kind == "train":
+            if self.modality == "text":
+                inp = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+            else:  # stub frontend: precomputed patch/frame embeddings
+                inp = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+            return {
+                "inputs": inp,
+                "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            }
+        if kind == "prefill":
+            if self.modality == "text":
+                inp = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+            else:
+                inp = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+            return {"inputs": inp}
+        # decode: one new token against a KV cache of length seq
+        if self.modality == "text":
+            inp = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        else:
+            inp = jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.bfloat16)
+        return {
+            "inputs": inp,
+            "cur_len": jax.ShapeDtypeStruct((), jnp.int32),
+            # cache specs are derived by launch/dryrun.py via
+            # jax.eval_shape(init_cache, ...) with (batch, seq)
+        }

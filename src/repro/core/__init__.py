@@ -1,0 +1,37 @@
+# Free Join (Wang, Willsey, Suciu — SIGMOD 2023): the paper's primary
+# contribution. Plans (binary2fj + factor), COLT tries, the vectorized
+# Free Join engine, baselines, optimizer, and the distributed engine.
+from repro.core.api import binary_join, free_join, generic_join, to_sorted_tuples
+from repro.core.colt import Colt
+from repro.core.engine import ExecStats, execute, materialize
+from repro.core.optimizer import optimize
+from repro.core.plan import (
+    BinaryPlan,
+    FreeJoinPlan,
+    Subatom,
+    binary2fj,
+    factor,
+    gj_plan,
+    linear,
+    var_order_from_fj,
+)
+
+__all__ = [
+    "binary_join",
+    "free_join",
+    "generic_join",
+    "to_sorted_tuples",
+    "Colt",
+    "ExecStats",
+    "execute",
+    "materialize",
+    "optimize",
+    "BinaryPlan",
+    "FreeJoinPlan",
+    "Subatom",
+    "binary2fj",
+    "factor",
+    "gj_plan",
+    "linear",
+    "var_order_from_fj",
+]

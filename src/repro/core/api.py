@@ -1,0 +1,179 @@
+"""Top-level drivers: Free Join, Generic Join, and binary hash join.
+
+Each driver takes a query, relations, and a binary plan (tree). Bushy plans
+are decomposed into left-deep stages (Sec 2.2); every non-root stage is
+materialized into a fresh relation before its parent runs — the paper's
+(intentionally simple) materialization strategy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine
+from repro.core.plan import (
+    BinaryPlan,
+    FreeJoinPlan,
+    binary2fj,
+    factor,
+    gj_plan,
+    var_order_from_fj,
+)
+from repro.core.optimizer import optimize
+from repro.relational.relation import Relation
+from repro.relational.schema import Atom, Query
+
+
+def _stage_atoms(leaves, query: Query, stage_schemas: dict[str, tuple[str, ...]]):
+    atoms = []
+    for leaf in leaves:
+        if isinstance(leaf, Atom):
+            atoms.append(leaf)
+        else:
+            atoms.append(Atom(leaf, stage_schemas[leaf]))
+    return atoms
+
+
+def _run_stages(
+    query: Query,
+    relations: dict[str, Relation],
+    plan_tree: BinaryPlan,
+    *,
+    fj_mode: str,
+    factorize: bool,
+    dynamic_cover: bool,
+    agg,
+    stats: engine.ExecStats | None,
+):
+    rels = dict(relations)
+    stage_schemas: dict[str, tuple[str, ...]] = {}
+    stages = plan_tree.decompose()
+    result = None
+    for name, leaves in stages:
+        atoms = _stage_atoms(leaves, query, stage_schemas)
+        sub_q = Query(atoms)
+        fj = binary2fj(atoms, sub_q)
+        if factorize:
+            fj = factor(fj)
+        modes = _trie_modes(fj, fj_mode)
+        is_root = name == "__root"
+        out = engine.execute(
+            fj,
+            rels,
+            mode=modes,
+            dynamic_cover=dynamic_cover and factorize,
+            agg=agg if is_root else None,
+            stats=stats,
+        )
+        if is_root:
+            result = out
+        else:
+            bound, mult = out
+            cols = engine.materialize(bound, mult, sub_q.head)
+            rels[name] = Relation(name, cols)
+            stage_schemas[name] = sub_q.head
+    return result
+
+
+def _trie_modes(fj: FreeJoinPlan, fj_mode: str) -> dict[str, str]:
+    """Per-relation trie mode. For the binary-join baseline ("binary"):
+    hash tables are built eagerly for every probed relation, while pure
+    covers (only iterated, single level) build nothing."""
+    parts = fj.partitions()
+    if fj_mode != "binary":
+        return {a: fj_mode for a in parts}
+    probed = set()
+    for k, node in enumerate(fj.nodes):
+        for sa in node[1:]:
+            if sa.vars:
+                probed.add(sa.alias)
+    return {a: ("simple" if a in probed else "colt") for a in parts}
+
+
+def free_join(
+    query: Query,
+    relations: dict[str, Relation],
+    plan_tree: BinaryPlan | None = None,
+    *,
+    mode: str = "colt",
+    agg: str | None = None,
+    dynamic_cover: bool = True,
+    stats: engine.ExecStats | None = None,
+):
+    """The full Free Join system: cost-based binary plan -> binary2fj ->
+    factor -> COLT + vectorized execution (the paper's Sec 5 configuration)."""
+    if plan_tree is None:
+        plan_tree = optimize(query, relations)
+    return _run_stages(
+        query,
+        relations,
+        plan_tree,
+        fj_mode=mode,
+        factorize=True,
+        dynamic_cover=dynamic_cover,
+        agg=agg,
+        stats=stats,
+    )
+
+
+def binary_join(
+    query: Query,
+    relations: dict[str, Relation],
+    plan_tree: BinaryPlan | None = None,
+    *,
+    agg: str | None = None,
+    stats: engine.ExecStats | None = None,
+):
+    """Baseline 1: classic binary hash join == the unfactored binary2fj plan
+    with eagerly-built hash tables (Sec 5.3: 'if we do not optimize the Free
+    Join plan ... Free Join would behave identically to binary join')."""
+    if plan_tree is None:
+        plan_tree = optimize(query, relations)
+    return _run_stages(
+        query,
+        relations,
+        plan_tree,
+        fj_mode="binary",
+        factorize=False,
+        dynamic_cover=False,
+        agg=agg,
+        stats=stats,
+    )
+
+
+def generic_join(
+    query: Query,
+    relations: dict[str, Relation],
+    var_order: list[str] | None = None,
+    plan_tree: BinaryPlan | None = None,
+    *,
+    agg: str | None = None,
+    stats: engine.ExecStats | None = None,
+):
+    """Baseline 2: Generic Join — full trie construction for every relation,
+    variable-at-a-time plan. Variable order defaults to the one induced by
+    the Free Join plan (Sec 5.1)."""
+    if var_order is None:
+        if plan_tree is None:
+            plan_tree = optimize(query, relations)
+        order: list[str] = []
+        stage_schemas: dict[str, tuple[str, ...]] = {}
+        for name, leaves in plan_tree.decompose():
+            atoms = _stage_atoms(leaves, query, stage_schemas)
+            sub_q = Query(atoms)
+            fj = factor(binary2fj(atoms, sub_q))
+            stage_schemas[name] = sub_q.head
+            for v in var_order_from_fj(fj):
+                if v not in order:
+                    order.append(v)
+        var_order = [v for v in order if v in query.variables]
+    plan = gj_plan(query, var_order)
+    out = engine.execute(plan, relations, mode="simple", dynamic_cover=True, agg=agg, stats=stats)
+    return out
+
+
+def to_sorted_tuples(result, head) -> list:
+    bound, mult = result
+    cols = engine.materialize(bound, mult, head)
+    arrs = [np.asarray(cols[v]) for v in head]
+    n = len(arrs[0]) if arrs else 0
+    return sorted(tuple(int(a[i]) for a in arrs) for i in range(n))

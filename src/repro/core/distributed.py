@@ -1,0 +1,216 @@
+"""Distributed Free Join: HyperCube (Shares) partitioning + SPMD execution.
+
+The paper is single-core; the canonical way to distribute a worst-case
+optimal join is the HyperCube / Shares scheme: pick per-variable share
+counts p_v with prod(p_v) = P devices, view the device grid as a hypercube
+indexed by (h_v(a_v) mod p_v), and send each tuple of R(x_i) to every
+device whose coordinates agree on R's variables. Every device then runs the
+*same local Free Join* on its fragment; results are a disjoint union
+(counts: a psum). One round of communication, no intermediate shuffles —
+this composes cleanly with Free Join because the local engine is unchanged.
+
+Two execution paths share the partitioning logic:
+  * host path (numpy + eager engine) — used for correctness tests;
+  * SPMD path (`shard_map` + compiled engine + psum) — jit-able, lowers on
+    the production mesh (see launch/dryrun.py); padded local fragments keep
+    shapes static across devices.
+
+For acyclic queries hash partitioning on the first join key (shares
+concentrated on one variable) recovers the classic distributed hash join as
+a special case of the same code path.
+"""
+from __future__ import annotations
+
+import itertools
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, engine
+from repro.core.compiled import make_count_fn
+from repro.core.plan import FreeJoinPlan
+from repro.relational.npkit import mix64
+from repro.relational.relation import Relation
+from repro.relational.schema import Query
+
+
+def hypercube_shares(query: Query, sizes: dict[str, int], num_shards: int) -> dict[str, int]:
+    """Choose shares p_v (prod = num_shards, powers of two) minimizing the
+    max per-device load sum_R |R| / prod_{v in R} p_v. Exhaustive over
+    exponent splits — query variable counts are tiny."""
+    vars_ = list(query.variables)
+    logp = int(np.log2(num_shards))
+    assert 2**logp == num_shards, "num_shards must be a power of two"
+    best, best_load = None, float("inf")
+
+    def loads(assign: dict[str, int]) -> float:
+        total = 0.0
+        for a in query.atoms:
+            frac = 1.0
+            for v in a.vars:
+                frac /= assign[v]
+            total += sizes[a.alias] * frac
+        return total
+
+    for combo in itertools.combinations_with_replacement(range(len(vars_)), logp):
+        assign = {v: 1 for v in vars_}
+        for i in combo:
+            assign[vars_[i]] *= 2
+        load = loads(assign)
+        if load < best_load:
+            best, best_load = assign, load
+    return best
+
+
+def _coords(num_shards: int, shares: dict[str, int], var_order: list[str]):
+    """Map shard id -> {var: coordinate} (mixed radix over shared vars)."""
+    radices = [(v, shares[v]) for v in var_order if shares[v] > 1]
+    out = []
+    for s in range(num_shards):
+        c, rem = {}, s
+        for v, r in radices:
+            c[v] = rem % r
+            rem //= r
+        out.append(c)
+    return out
+
+
+def partition(
+    query: Query,
+    relations: dict[str, Relation],
+    shares: dict[str, int],
+    num_shards: int,
+) -> list[dict[str, Relation]]:
+    """HyperCube partition: each relation row goes to every shard whose
+    coordinates match the row's hashed values on the relation's vars."""
+    var_order = list(query.variables)
+    coords = _coords(num_shards, shares, var_order)
+    shards = []
+    for c in coords:
+        local = {}
+        for a in query.atoms:
+            rel = relations[a.alias]
+            mask = np.ones(rel.num_rows, dtype=bool)
+            for v in a.vars:
+                if shares[v] > 1:
+                    hv = mix64([rel.columns[v].astype(np.int64)]) % shares[v]
+                    mask &= hv == c[v]
+            local[a.alias] = rel.select(mask)
+        shards.append(local)
+    return shards
+
+
+def distributed_join_host(
+    query: Query,
+    relations: dict[str, Relation],
+    num_shards: int,
+    plan_tree=None,
+    agg: str | None = None,
+):
+    """Reference distributed execution: partition + per-shard eager Free
+    Join + union/sum. Semantically equal to single-node free_join."""
+    sizes = {a.alias: relations[a.alias].num_rows for a in query.atoms}
+    shares = hypercube_shares(query, sizes, num_shards)
+    shards = partition(query, relations, shares, num_shards)
+    if agg == "count":
+        return sum(api.free_join(query, s, plan_tree, agg="count") for s in shards)
+    outs = []
+    for s in shards:
+        bound, mult = api.free_join(query, s, plan_tree)
+        outs.append(engine.materialize(bound, mult, query.head))
+    return {
+        v: np.concatenate([o[v] for o in outs]) if outs else np.zeros(0, np.int64)
+        for v in query.head
+    }
+
+
+# ---------------------------------------------------------------------------
+# SPMD path: shard_map(local compiled count) + psum over the mesh.
+# ---------------------------------------------------------------------------
+
+
+def pad_shards_to_dense(shards, query: Query):
+    """Stack per-shard fragments into dense (num_shards, N_max) arrays with
+    a sentinel-padded tail. Padding rows get key -1 on every column, which
+    can never join (real keys are dictionary-encoded >= 0) — they flow
+    through the local engine and produce zero matches by construction...
+    except an all-pad relation fragment still iterates its sentinels when it
+    is a pure cover, so we also hand the local engine a per-shard row count
+    and mask the first node (see _mask_first)."""
+    out = {}
+    counts = {}
+    for a in query.atoms:
+        nmax = max(max(s[a.alias].num_rows for s in shards), 1)
+        cols = {}
+        for v in a.vars:
+            arr = np.full((len(shards), nmax), -1, dtype=np.int32)
+            for i, s in enumerate(shards):
+                r = s[a.alias]
+                arr[i, : r.num_rows] = r.columns[v].astype(np.int32)
+            cols[v] = arr
+        out[a.alias] = cols
+        counts[a.alias] = np.array([s[a.alias].num_rows for s in shards], np.int32)
+    return out, counts
+
+
+def _mask_pad(cols: dict[str, dict[str, jnp.ndarray]], counts: dict[str, jnp.ndarray]):
+    """Replace pad rows' keys with negative sentinels unique across *all*
+    relations (a global offset per alias), so pad rows never match any probe
+    and never collide with another relation's pad rows."""
+    out = {}
+    offset = 0
+    for alias in sorted(cols):
+        c = cols[alias]
+        n = next(iter(c.values())).shape[0]
+        idx = jnp.arange(n, dtype=jnp.int32)
+        pad = idx >= counts[alias]
+        out[alias] = {v: jnp.where(pad, -(offset + idx) - 1, a) for v, a in c.items()}
+        offset += n
+    return out
+
+
+def spmd_count(
+    query: Query,
+    relations: dict[str, Relation],
+    plan: FreeJoinPlan,
+    capacities: list[int],
+    mesh: jax.sharding.Mesh,
+    axis: str = "data",
+    impl: str = "jnp",
+):
+    """End-to-end SPMD count: hypercube partition on the host, pad to dense,
+    shard over `axis`, run the compiled local engine per device, psum."""
+    num_shards = mesh.shape[axis]
+    sizes = {a.alias: relations[a.alias].num_rows for a in query.atoms}
+    shares = hypercube_shares(query, sizes, num_shards)
+    shards = partition(query, relations, shares, num_shards)
+    dense, counts = pad_shards_to_dense(shards, query)
+    local = make_count_fn(plan, capacities, impl=impl)
+
+    def per_shard(cols, cnts):
+        cols = jax.tree.map(lambda x: x[0], cols)
+        cnts = jax.tree.map(lambda x: x[0], cnts)
+        cols = _mask_pad(cols, cnts)
+        c, ovf = local(cols)
+        c = jnp.where(ovf, -(2**30), c)
+        return jax.lax.psum(c, axis)
+
+    pspec = jax.sharding.PartitionSpec(axis)
+    dense_j = jax.tree.map(jnp.asarray, dense)
+    counts_j = jax.tree.map(jnp.asarray, counts)
+    fn = jax.jit(
+        jax.shard_map(
+            per_shard,
+            mesh=mesh,
+            in_specs=(
+                jax.tree.map(lambda _: pspec, dense_j),
+                jax.tree.map(lambda _: pspec, counts_j),
+            ),
+            out_specs=jax.sharding.PartitionSpec(),
+        )
+    )
+    total = fn(dense_j, counts_j)
+    return int(total)

@@ -1,0 +1,214 @@
+"""The Free Join algorithm (Fig. 7), executed fully vectorized.
+
+The paper batches the cover iteration and probes per relation (Sec 4.3,
+Fig. 13); on vector hardware we take that to its limit: the *entire frontier*
+(the set of partially-bound tuples at the current plan node) is one batch.
+Each plan node is executed as: expand the frontier along the cover's trie
+level, then probe every other subatom's trie level with whole-column keys,
+filtering the frontier by the hit mask. Per-tuple recursion disappears; the
+recursion depth of Fig. 7 becomes a sequential walk over plan nodes.
+
+Bag semantics: duplicate tuples live below the deepest trie level; instead of
+expanding them eagerly we carry a `mult` column and expand once at output
+(duplicates agree on all bound vars, so this is exact).
+
+Factorized counting (Sec 4.4 "factorized representation... to compress large
+outputs"): with agg="count", a cover at its last, unforced level whose vars
+are never used again contributes only its subtree sizes to `mult` — no
+expansion. This is the optimization behind the paper's Fig. 19.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.colt import Colt
+from repro.core.plan import FreeJoinPlan, Subatom
+from repro.relational.relation import Relation
+
+
+@dataclass
+class Frontier:
+    n: int
+    mult: np.ndarray
+    bound: dict[str, np.ndarray] = field(default_factory=dict)
+    gid: dict[str, np.ndarray] = field(default_factory=dict)
+
+    def expand(self, fr: np.ndarray) -> None:
+        self.mult = self.mult[fr]
+        self.bound = {k: v[fr] for k, v in self.bound.items()}
+        self.gid = {k: v[fr] for k, v in self.gid.items()}
+        self.n = len(fr)
+
+    def filter(self, mask: np.ndarray) -> None:
+        self.mult = self.mult[mask]
+        self.bound = {k: v[mask] for k, v in self.bound.items()}
+        self.gid = {k: v[mask] for k, v in self.gid.items()}
+        self.n = int(mask.sum()) if mask.dtype == bool else len(mask)
+
+    def gids_for(self, alias: str) -> np.ndarray:
+        if alias not in self.gid:
+            self.gid[alias] = np.zeros(self.n, dtype=np.int64)
+        return self.gid[alias]
+
+
+@dataclass
+class ExecStats:
+    build_ns: int = 0
+    max_frontier: int = 0
+    probes: int = 0
+    expansions: int = 0
+
+
+def execute(
+    plan: FreeJoinPlan,
+    relations: dict[str, Relation],
+    *,
+    mode: str | dict[str, str] = "colt",
+    dynamic_cover: bool = True,
+    agg: str | None = None,
+    stats: ExecStats | None = None,
+):
+    """Run a Free Join plan. Returns (bound, mult) where bound maps each
+    query variable to a column and mult is the per-row multiplicity — or the
+    scalar count when agg == "count"."""
+    plan.validate()
+    parts = plan.partitions()
+    modes = mode if isinstance(mode, dict) else {a: mode for a in parts}
+    tries = {
+        alias: Colt(relations[alias], parts[alias], mode=modes.get(alias, "colt"))
+        for alias in parts
+    }
+    depth = {alias: 0 for alias in parts}
+    f = Frontier(n=1, mult=np.ones(1, dtype=np.int64))
+
+    for k, node in enumerate(plan.nodes):
+        subs = [sa for sa in node if sa.vars]
+        if not subs:
+            continue
+        cover = _choose_cover(plan, k, subs, tries, depth, dynamic_cover, f)
+        probes = [sa for sa in subs if sa is not cover]
+
+        needed_later = _needed_later(plan, k, probes, agg)
+        if (
+            agg == "count"
+            and not (set(cover.vars) & needed_later)
+            and not any(v in f.bound for v in cover.vars)
+            and depth[cover.alias] == tries[cover.alias].L - 1
+            and depth[cover.alias] == tries[cover.alias].forced_depth
+        ):
+            # factorized count: fold subtree sizes into mult, skip expansion
+            t = tries[cover.alias]
+            g = f.gids_for(cover.alias)
+            f.mult = f.mult * t.subtree_sizes(depth[cover.alias], g)
+            f.gid.pop(cover.alias, None)
+            depth[cover.alias] = t.L
+        else:
+            _iterate_cover(f, cover, tries, depth, stats)
+        for sa in probes:
+            _probe(f, sa, tries, depth, stats)
+            if f.n == 0:
+                break
+        if stats is not None:
+            stats.max_frontier = max(stats.max_frontier, f.n)
+        if f.n == 0:
+            break
+
+    if stats is not None:
+        stats.build_ns = sum(t.build_ns for t in tries.values())
+    if agg == "count":
+        return int(f.mult.sum())
+    return f.bound, f.mult
+
+
+def _choose_cover(plan, k, subs, tries, depth, dynamic, f: "Frontier"):
+    covers = [sa for sa in plan.covers(k) if sa.vars]
+    covers = [sa for sa in covers if any(sa is s for s in subs)]
+    if not covers:
+        raise ValueError(f"node {k} has no usable cover")
+    if not dynamic or len(covers) == 1:
+        return covers[0]
+    # Sec 4.4, frontier-conditional: iterate the cover whose expansion is
+    # smallest *given the current frontier* (exact per-subtrie sums; the
+    # paper's fewest-keys rule is the tuple-at-a-time approximation).
+    return min(
+        covers,
+        key=lambda sa: tries[sa.alias].iter_cost(depth[sa.alias], f.gids_for(sa.alias)),
+    )
+
+
+def _needed_later(plan, k, probes, agg) -> set[str]:
+    need: set[str] = set()
+    for sa in probes:
+        need |= set(sa.vars)
+    for node in plan.nodes[k + 1 :]:
+        for sa in node:
+            need |= set(sa.vars)
+    if agg != "count":
+        need |= set(plan.query.head)
+    return need
+
+
+def _iterate_cover(f: Frontier, sa: Subatom, tries, depth, stats) -> None:
+    t: Colt = tries[sa.alias]
+    d = depth[sa.alias]
+    gids = f.gids_for(sa.alias)
+    fr, cols, new_gids = t.iter_expand(d, gids)
+    # A cover may contain vars bound by earlier nodes (possible after
+    # dynamic cover selection): those act as a semijoin filter, not a
+    # rebinding.
+    rebound = [i for i, v in enumerate(sa.vars) if v in f.bound]
+    f.expand(fr)
+    if rebound:
+        keep = np.ones(len(fr), dtype=bool)
+        for i in rebound:
+            keep &= cols[i] == f.bound[sa.vars[i]]
+        f.filter(keep)
+        cols = [c[keep] for c in cols]
+        if new_gids is not None:
+            new_gids = new_gids[keep]
+    for v, c in zip(sa.vars, cols):
+        if v not in f.bound:
+            f.bound[v] = c
+    if stats is not None:
+        stats.expansions += len(fr)
+    depth[sa.alias] = d + 1
+    if new_gids is None:
+        f.gid.pop(sa.alias, None)  # exhausted by direct row iteration
+        return
+    if depth[sa.alias] == t.L:
+        f.mult = f.mult * t.leaf_counts(new_gids)
+        f.gid.pop(sa.alias, None)
+    else:
+        f.gid[sa.alias] = new_gids
+
+
+def _probe(f: Frontier, sa: Subatom, tries, depth, stats) -> None:
+    t: Colt = tries[sa.alias]
+    d = depth[sa.alias]
+    gids = f.gids_for(sa.alias)
+    keys = [f.bound[v] for v in sa.vars]
+    res = t.probe(d, gids, keys)
+    if stats is not None:
+        stats.probes += len(res)
+    hit = res >= 0
+    res = res[hit]
+    f.filter(hit)
+    depth[sa.alias] = d + 1
+    if depth[sa.alias] == t.L:
+        f.mult = f.mult * t.leaf_counts(res)
+        f.gid.pop(sa.alias, None)
+    else:
+        f.gid[sa.alias] = res
+
+
+def materialize(bound: dict[str, np.ndarray], mult: np.ndarray, head) -> dict[str, np.ndarray]:
+    """Expand multiplicities into physical duplicate rows (bag output)."""
+    if len(mult) == 0:
+        # empty result: later nodes may never have bound their vars
+        return {v: bound.get(v, np.zeros(0, dtype=np.int64)) for v in head}
+    if mult.max(initial=1) > 1:
+        idx = np.repeat(np.arange(len(mult)), mult)
+        return {v: bound[v][idx] for v in head}
+    return {v: bound[v] for v in head}

@@ -1,0 +1,93 @@
+"""A small cost-based optimizer producing binary join plans.
+
+The paper uses DuckDB's optimizer; DuckDB is not available in this
+container, so we implement the classic textbook estimator: greedy left-deep
+join ordering driven by cardinality estimates
+|L join R| = |L|*|R| / prod_{v shared} max(d_L(v), d_R(v)).
+
+`bad=True` reproduces the paper's Sec 5.4 hijack — every cardinality
+estimate is pinned to 1 — under which the greedy search degenerates to
+input order and we emit a *bushy* balanced tree (the paper observes DuckDB
+"routinely outputs bushy plans that materialize large results" in this
+regime).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.plan import BinaryPlan, linear
+from repro.relational.relation import Relation
+from repro.relational.schema import Atom, Query
+
+
+class _Est:
+    def __init__(self, card: float, distinct: dict[str, float], atoms: list[Atom]):
+        self.card = card
+        self.distinct = distinct
+        self.atoms = atoms
+
+
+def _base_est(atom: Atom, rel: Relation, bad: bool) -> _Est:
+    if bad:
+        return _Est(1.0, {v: 1.0 for v in atom.vars}, [atom])
+    d = {v: float(max(1, len(np.unique(rel.columns[v])))) for v in atom.vars}
+    return _Est(float(max(1, rel.num_rows)), d, [atom])
+
+
+def _join_est(a: _Est, b: _Est) -> _Est:
+    shared = set(a.distinct) & set(b.distinct)
+    denom = 1.0
+    for v in shared:
+        denom *= max(a.distinct[v], b.distinct[v])
+    card = max(1.0, a.card * b.card / max(1.0, denom))
+    d = dict(a.distinct)
+    for v, dv in b.distinct.items():
+        d[v] = min(d.get(v, float("inf")), dv, card)
+    d = {v: min(dv, card) for v, dv in d.items()}
+    return _Est(card, d, a.atoms + b.atoms)
+
+
+def optimize(query: Query, relations: dict[str, Relation], bad: bool = False) -> BinaryPlan:
+    ests = [_base_est(a, relations[a.alias], bad) for a in query.atoms]
+    if bad:
+        # balanced bushy over input order (all estimates tie at 1)
+        nodes: list = list(query.atoms)
+        while len(nodes) > 1:
+            nxt = []
+            for i in range(0, len(nodes) - 1, 2):
+                nxt.append(BinaryPlan(nodes[i], nodes[i + 1]))
+            if len(nodes) % 2:
+                nxt.append(nodes[-1])
+            nodes = nxt
+        return nodes[0] if isinstance(nodes[0], BinaryPlan) else BinaryPlan(nodes[0], nodes[0])
+    # greedy left-deep: best starting pair, then best extension
+    best_pair, best_card = None, float("inf")
+    for i in range(len(ests)):
+        for j in range(len(ests)):
+            if i == j or not (set(ests[i].distinct) & set(ests[j].distinct)):
+                continue
+            e = _join_est(ests[i], ests[j])
+            # prefer iterating the bigger relation first (build on the smaller)
+            if e.card < best_card or (
+                e.card == best_card and best_pair and ests[i].card > ests[best_pair[0]].card
+            ):
+                best_pair, best_card = (i, j), e.card
+    if best_pair is None:
+        best_pair = (0, 1) if len(ests) > 1 else (0, 0)
+    cur = _join_est(ests[best_pair[0]], ests[best_pair[1]]) if len(ests) > 1 else ests[0]
+    used = set(best_pair)
+    order = [query.atoms[best_pair[0]]] + ([query.atoms[best_pair[1]]] if len(ests) > 1 else [])
+    while len(used) < len(ests):
+        best_k, best_e = None, None
+        for k in range(len(ests)):
+            if k in used:
+                continue
+            connected = bool(set(ests[k].distinct) & set(cur.distinct))
+            e = _join_est(cur, ests[k])
+            key = (not connected, e.card)
+            if best_e is None or key < best_e:
+                best_k, best_e = k, key
+        used.add(best_k)
+        order.append(query.atoms[best_k])
+        cur = _join_est(cur, ests[best_k])
+    return linear(order)

@@ -1,0 +1,102 @@
+"""Tuple-at-a-time Free Join (Fig. 7) with optional batched probing
+(Fig. 13). This is the paper's literal execution model — recursive, one
+tuple (or one batch of `batch_size` tuples) per iteration — kept for the
+vectorization ablation (Fig. 18) and as a semantic cross-check of the
+full-batch engine. It shares the Colt structures; probes go through the
+same batched `probe` with small batches.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.colt import Colt
+from repro.core.plan import FreeJoinPlan
+
+
+def execute_tuples(
+    plan: FreeJoinPlan,
+    relations,
+    *,
+    mode: str | dict = "colt",
+    batch_size: int = 1000,
+    dynamic_cover: bool = True,
+):
+    """Returns the list of output tuples ordered by plan.query.head."""
+    plan.validate()
+    parts = plan.partitions()
+    modes = mode if isinstance(mode, dict) else {a: mode for a in parts}
+    tries = {
+        alias: Colt(relations[alias], parts[alias], mode=modes.get(alias, "colt"), filtered=False)
+        for alias in parts
+    }
+    head = plan.query.head
+    out: list[tuple] = []
+
+    # state: per-alias (depth, gid); bound: var -> value
+    def join(k: int, bound: dict, state: dict):
+        if k == len(plan.nodes):
+            # bag semantics: multiply leftover leaf multiplicities
+            m = 1
+            for alias, (d, g) in state.items():
+                t = tries[alias]
+                if d == t.L and g is not None:
+                    m *= int(t.leaf_counts(np.array([g]))[0])
+            row = tuple(bound[v] for v in head)
+            out.extend([row] * m)
+            return
+        subs = [sa for sa in plan.nodes[k] if sa.vars]
+        if not subs:
+            join(k + 1, bound, state)
+            return
+        covers = [sa for sa in plan.covers(k) if sa.vars and any(sa is s for s in subs)]
+        cover = covers[0]
+        if dynamic_cover and len(covers) > 1:
+            cover = min(
+                covers,
+                key=lambda sa: tries[sa.alias].key_count_estimate(state[sa.alias][0]),
+            )
+        probes = [sa for sa in subs if sa is not cover]
+        t = tries[cover.alias]
+        d, g = state[cover.alias]
+        fr, cols, new_gids = t.iter_expand(d, np.array([g if g is not None else 0]))
+        n = len(fr)
+        # iterate in batches of batch_size (Fig. 13)
+        for lo in range(0, n, batch_size):
+            hi = min(lo + batch_size, n)
+            idx = np.arange(lo, hi)
+            tup_cols = {v: c[idx] for v, c in zip(cover.vars, cols)}
+            ng = new_gids[idx] if new_gids is not None else None
+            alive = np.ones(hi - lo, dtype=bool)
+            # semijoin-filter vars the cover re-binds (see engine.py)
+            for v in cover.vars:
+                if v in bound:
+                    alive &= tup_cols[v] == bound[v]
+            probe_results: dict[str, np.ndarray] = {}
+            for sa in probes:
+                pt = tries[sa.alias]
+                pd, pg = state[sa.alias]
+                gids = np.full(hi - lo, pg if pg is not None else 0, dtype=np.int64)
+                keys = [
+                    tup_cols[v] if v in tup_cols else np.full(hi - lo, bound[v], dtype=np.int64)
+                    for v in sa.vars
+                ]
+                res = pt.probe(pd, gids, keys)
+                alive &= res >= 0
+                probe_results[sa.alias] = res
+            for j in range(hi - lo):
+                if not alive[j]:
+                    continue
+                b2 = dict(bound)
+                for v in cover.vars:
+                    b2[v] = int(tup_cols[v][j])
+                s2 = dict(state)
+                cd = d + 1
+                s2[cover.alias] = (cd, int(ng[j]) if ng is not None else None)
+                for sa in probes:
+                    pd, _ = state[sa.alias]
+                    s2[sa.alias] = (pd + 1, int(probe_results[sa.alias][j]))
+                join(k + 1, b2, s2)
+
+    state0 = {alias: (0, 0) for alias in parts}
+    join(0, {}, state0)
+    return out

@@ -1,0 +1,180 @@
+"""Jit'd wrappers around the Pallas kernels, plus the table build.
+
+Three implementations per op, selected by `impl`:
+  "jnp"               pure-jnp vectorized path (default on CPU; identical
+                      math to the kernel, XLA-fused)
+  "pallas_interpret"  the Pallas kernel body executed in interpret mode
+                      (CPU correctness validation of the TPU kernel)
+  "pallas"            compiled Pallas (TPU target)
+
+The hash-table *build* is sort-based and stays in jnp by design: slot
+assignment after sorting by home slot is `slot_i = i + cummax(h_i - i)`
+(an associative scan), so XLA already emits the optimal sort + scan; there
+is no tiling decision for a kernel to make. The probe is where the kernel
+earns its keep (many probes per build, VPU-bound).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.csr_expand import OBLK, csr_expand_pallas
+from repro.kernels.hash_probe import PROBE_BUDGET, QBLK, hash_probe_pallas, mix32
+from repro.kernels.intersect import intersect_pallas
+
+
+class Table(NamedTuple):
+    slots: jnp.ndarray  # (cap + PROBE_BUDGET,) int32 row index or -1
+    keys: jnp.ndarray  # (N, K) int32 key rows
+    max_disp: jnp.ndarray  # () int32: max probe distance used at build
+
+
+def _next_pow2(n: int) -> int:
+    return max(8, 1 << (max(1, 2 * n) - 1).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "budget"))
+def _build(keys: jnp.ndarray, cap: int, budget: int = PROBE_BUDGET) -> Table:
+    n = keys.shape[0]
+    h = mix32(keys) & (cap - 1)
+    order = jnp.argsort(h).astype(jnp.int32)
+    hs = h[order]
+    disp = jax.lax.cummax(hs - jnp.arange(n, dtype=jnp.int32))
+    slot = jnp.arange(n, dtype=jnp.int32) + disp
+    max_disp = (slot - hs).max(initial=0)
+    slots = jnp.full(cap + budget, -1, dtype=jnp.int32)
+    slots = slots.at[slot].set(order, mode="drop")
+    return Table(slots=slots, keys=keys, max_disp=max_disp)
+
+
+def build_table(keys: jnp.ndarray, budget: int = PROBE_BUDGET) -> Table:
+    """keys: (N, K) int32, rows unique. Linear probing, load factor <= 0.5,
+    no wraparound (tail margin = `budget`). max_disp >= budget would mean an
+    overflow — astronomically unlikely at <=0.5 load; checked by callers in
+    tests via table.max_disp. Smaller budgets shrink the unrolled probe loop
+    (§Perf J1) at the cost of a tighter displacement margin."""
+    if keys.ndim != 2:
+        raise ValueError("keys must be (N, K)")
+    return _build(keys, _next_pow2(keys.shape[0]), budget)
+
+
+@functools.partial(jax.jit, static_argnames=("budget",))
+def _probe_jnp(slots, keys, queries, budget: int):
+    cap = slots.shape[0] - budget
+    h = mix32(queries) & (cap - 1)
+    res = jnp.full(h.shape, -1, dtype=jnp.int32)
+    done = jnp.zeros(h.shape, dtype=bool)
+    nkeys = keys.shape[0]
+    for p in range(budget):
+        cand = slots[h + p]
+        is_empty = cand < 0
+        krow = keys[jnp.clip(cand, 0, nkeys - 1)]
+        match = (~is_empty) & (krow == queries).all(axis=-1)
+        hit = match & ~done
+        res = jnp.where(hit, cand, res)
+        done = done | hit | is_empty
+    return res
+
+
+def _pad_rows(x: jnp.ndarray, mult: int, fill) -> tuple[jnp.ndarray, int]:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        x = jnp.pad(x, width, constant_values=fill)
+    return x, n
+
+
+def probe(table: Table, queries: jnp.ndarray, impl: str = "jnp") -> jnp.ndarray:
+    """queries: (Q, K) int32 -> (Q,) int32 row index in table.keys or -1."""
+    if table.keys.shape[0] == 0 or queries.shape[0] == 0:
+        return jnp.full(queries.shape[0], -1, dtype=jnp.int32)
+    if impl == "jnp":
+        budget = table.slots.shape[0] - _next_pow2(table.keys.shape[0])
+        return _probe_jnp(table.slots, table.keys, queries, budget)
+    q, n = _pad_rows(queries, QBLK, 0)
+    out = hash_probe_pallas(table.slots, table.keys, q, interpret=impl == "pallas_interpret")
+    return out[:n]
+
+
+def intersect_sorted(a: jnp.ndarray, b: jnp.ndarray, impl: str = "jnp"):
+    """a: (Q,) queries; b: (N,) sorted unique. Returns (mask, pos)."""
+    if b.shape[0] == 0 or a.shape[0] == 0:
+        return jnp.zeros(a.shape[0], bool), jnp.full(a.shape[0], -1, jnp.int32)
+    if impl == "jnp":
+        pos = jnp.searchsorted(b, a).astype(jnp.int32)
+        mask = (pos < b.shape[0]) & (b[jnp.clip(pos, 0, b.shape[0] - 1)] == a)
+        return mask, jnp.where(mask, pos, -1)
+    ap, n = _pad_rows(a, QBLK, 0)
+    mask, pos = intersect_pallas(ap, b, interpret=impl == "pallas_interpret")
+    return mask[:n], pos[:n]
+
+
+def expand_counted(
+    base: jnp.ndarray,
+    counts: jnp.ndarray,
+    capacity: int,
+    impl: str = "jnp",
+):
+    """Variable-fanout expansion: frontier row i contributes `counts[i]`
+    outputs, the j-th reading position base[i] + j. Returns
+    (fr, member, valid, total) with static `capacity`. Rows with count 0
+    (e.g. invalid frontier slots) contribute nothing."""
+    counts = counts.astype(jnp.int32)
+    cum = jnp.cumsum(counts)
+    total = (cum[-1] if counts.shape[0] else jnp.int32(0)).astype(jnp.int32)
+    starts = (cum - counts).astype(jnp.int32)
+    base = base.astype(jnp.int32)
+    if impl == "jnp":
+        out = jnp.arange(capacity, dtype=jnp.int32)
+        fr = jnp.searchsorted(starts, out, side="right").astype(jnp.int32) - 1
+        fr = jnp.clip(fr, 0, max(counts.shape[0] - 1, 0))
+        member = base[fr] + (out - starts[fr])
+        valid = out < total
+        return jnp.where(valid, fr, -1), jnp.where(valid, member, -1), valid, total
+    cap = capacity + ((-capacity) % OBLK)
+    fr, member = csr_expand_pallas(
+        starts, base, total[None], capacity=cap, interpret=impl == "pallas_interpret"
+    )
+    valid = jnp.arange(cap, dtype=jnp.int32) < total
+    return fr[:capacity], member[:capacity], valid[:capacity], total
+
+
+def csr_expand_capped(
+    offsets: jnp.ndarray,
+    groups: jnp.ndarray,
+    capacity: int,
+    impl: str = "jnp",
+):
+    """Expand CSR members of each groups[i] into a `capacity` buffer.
+    Returns (fr, member, valid, total). offsets: (G+1,) int32; groups: (F,).
+    """
+    if groups.shape[0] == 0:
+        z = jnp.full(capacity, -1, jnp.int32)
+        return z, z, jnp.zeros(capacity, bool), jnp.int32(0)
+    counts = (offsets[groups + 1] - offsets[groups]).astype(jnp.int32)
+    cum = jnp.cumsum(counts)
+    total = cum[-1].astype(jnp.int32)
+    starts = (cum - counts).astype(jnp.int32)
+    base = offsets[groups].astype(jnp.int32)
+    if impl == "jnp":
+        out = jnp.arange(capacity, dtype=jnp.int32)
+        fr = jnp.searchsorted(starts, out, side="right").astype(jnp.int32) - 1
+        fr = jnp.clip(fr, 0, groups.shape[0] - 1)
+        member = base[fr] + (out - starts[fr])
+        valid = out < total
+        return (
+            jnp.where(valid, fr, -1),
+            jnp.where(valid, member, -1),
+            valid,
+            total,
+        )
+    cap = capacity + ((-capacity) % OBLK)
+    fr, member = csr_expand_pallas(
+        starts, base, total[None], capacity=cap, interpret=impl == "pallas_interpret"
+    )
+    valid = jnp.arange(cap, dtype=jnp.int32) < total
+    return fr[:capacity], member[:capacity], valid[:capacity], total

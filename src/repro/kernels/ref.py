@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: O(N*Q) or scan-based implementations
+with no tiling, no probe budgets, no capacity tricks. Kernel tests sweep
+shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hash_probe_ref(table_keys: jnp.ndarray, query_keys: jnp.ndarray) -> jnp.ndarray:
+    """For each query row, the index of the matching row in table_keys
+    (-1 if absent). table_keys: (N, K) unique rows; query_keys: (Q, K).
+    Brute force O(N*Q*K)."""
+    eq = (query_keys[:, None, :] == table_keys[None, :, :]).all(-1)  # (Q, N)
+    any_hit = eq.any(axis=1)
+    idx = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    return jnp.where(any_hit, idx, -1)
+
+
+def intersect_ref(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """a, b sorted unique 1-D int arrays. Returns (mask over a, position of
+    a[i] in b or -1)."""
+    eq = a[:, None] == b[None, :]
+    hit = eq.any(axis=1)
+    pos = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    return hit, jnp.where(hit, pos, -1)
+
+
+def csr_expand_ref(offsets: jnp.ndarray, groups: jnp.ndarray, capacity: int):
+    """Expand each groups[i] into its CSR members, densely packed into a
+    buffer of `capacity` slots. Returns (frontier_row, member, valid, total).
+    Scan-based exact reference."""
+    counts = offsets[groups + 1] - offsets[groups]
+    cum = jnp.cumsum(counts)
+    total = cum[-1] if counts.size else jnp.int32(0)
+    starts = cum - counts
+    out = jnp.arange(capacity, dtype=jnp.int32)
+    # frontier row owning output slot j: last row with starts <= j
+    fr = jnp.searchsorted(starts, out, side="right").astype(jnp.int32) - 1
+    fr = jnp.clip(fr, 0, max(len(groups) - 1, 0))
+    within = out - starts[fr]
+    member = offsets[groups[fr]].astype(jnp.int32) + within
+    valid = out < total
+    fr = jnp.where(valid, fr, -1)
+    member = jnp.where(valid, member, -1)
+    return fr, member, valid, total.astype(jnp.int32)

@@ -1,0 +1,365 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set XLA_FLAGS before any other import (jax locks the device count on
+first init). Smoke tests and benches never import this module, so they see
+the real single CPU device.
+
+Per cell this proves, without hardware:
+  * the sharding config is coherent (no mismatched collectives),
+  * the program fits (memory_analysis),
+  * and it yields the roofline terms (cost_analysis + collective bytes
+    parsed from the compiled HLO) consumed by launch/roofline.py.
+
+FLOPs accounting: XLA's cost model counts a `while` (lax.scan over layers)
+body ONCE, so the scanned production program under-reports compute. Each
+cell therefore also compiles two cheap *probes* with the layer scan fully
+unrolled at R=1 and R=2 pattern units; per metric m,
+    body = m(R=2) - m(R=1),   total = m(R=1) + (repeats - 1) * body.
+The compile-proof, memory analysis, and HLO are always taken from the real
+scanned program.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_arch  # noqa: E402
+from repro.launch import sharding as shard  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.transformer import (  # noqa: E402
+    apply_model,
+    decode_step,
+    init_cache,
+    init_params,
+)
+from repro.train import AdamWConfig, TrainConfig, make_train_step  # noqa: E402
+from repro.train.optimizer import init_state  # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start)?\b"
+)
+_TYPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]"
+)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes of every collective op in the (SPMD, per-device)
+    module. `-done` ops are skipped (their `-start` was counted)."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        if f"{m.group(1)}-done" in line:
+            continue
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(m.group(1))[0]
+        nbytes = 0
+        for dt, dims in _TYPE_RE.findall(lhs):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        if nbytes:
+            out[m.group(1)] = out.get(m.group(1), 0) + nbytes
+    return out
+
+
+def collective_bytes_scaled(hlo_text: str, repeats: int) -> dict[str, int]:
+    """Like collective_bytes, but collectives inside `while` bodies are
+    multiplied by `repeats` (the layer-scan trip count). More robust than
+    the R1/R2 probe correction when GSPMD picks different strategies at
+    different unroll factors (observed on MoE cells). Approximation: every
+    while body is assumed to be a layer scan; inner scans (mamba chunks,
+    rwkv time) would be over-scaled — none of the §Perf cells contain them.
+    """
+    # find computations used as while bodies
+    bodies = set(re.findall(r"body=%?([\w.\-]+)", hlo_text))
+    out: dict[str, int] = {}
+    current: str | None = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "(" in stripped and "=" not in stripped.split("(")[0]:
+            name = stripped.split("(")[0].strip().lstrip("%")
+            name = name.replace("ENTRY", "").strip().lstrip("%")
+            if name:
+                current = name
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line or f"{m.group(1)}-done" in line:
+            continue
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(m.group(1))[0]
+        nbytes = 0
+        for dt, dims in _TYPE_RE.findall(lhs):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        if nbytes:
+            mult = repeats if current in bodies else 1
+            out[m.group(1)] = out.get(m.group(1), 0) + nbytes * mult
+    return out
+
+
+def _sds(tree):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def _cost(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def _memory(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = [
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ]
+    return {k: getattr(ma, k, None) for k in keys}
+
+
+def _metrics(compiled) -> dict:
+    cost = _cost(compiled)
+    colls = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0) or 0.0),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0) or 0.0),
+        "collective_bytes": colls,
+    }
+
+
+def _set_constraints(cfg, mesh, seq: int, batch: int, kind: str):
+    """Pin the activation shardings GSPMD won't find on its own: the
+    residual stream (batch over dp axes) and the logits (vocab over model)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.models import layers as L
+
+    L.clear_constraints()
+    s = 1 if kind == "decode" else seq
+    act = shard.batch_spec((batch, s, cfg.d_model), mesh)
+    bdim = act[0] if len(act) else None
+    L.set_constraint("act" if kind != "decode" else "act_dec",
+                     NamedSharding(mesh, act))
+    if cfg.vocab % mesh.shape.get("model", 1) == 0:
+        L.set_constraint("logits", NamedSharding(mesh, P(bdim, None, "model")))
+    if cfg.moe is not None:
+        # §Perf H1 (confirmed): batch-sharded MoE dispatch/combine buffers
+        # kill the resharding collective-permutes GSPMD otherwise inserts.
+        L.set_constraint("moe_buf", NamedSharding(mesh, P(bdim, None, None, None)))
+        L.set_constraint("moe_y", NamedSharding(mesh, P(bdim, None, None)))
+
+
+def _lower_kind(spec, cfg, shape_name: str, mesh, opt_dtype: str, microbatches: int = 1):
+    """Lower + compile one program for (cfg, shape) on mesh."""
+    seq, batch, kind = SHAPES[shape_name]
+    params_shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    pshard = shard.param_shardings(params_shapes, mesh)
+    ins = spec.input_specs(shape_name)
+    _set_constraints(cfg, mesh, seq, batch, kind)
+    with mesh:
+        if kind == "train":
+            tcfg = TrainConfig(
+                adamw=AdamWConfig(moment_dtype=opt_dtype), microbatches=microbatches
+            )
+            opt_shapes = jax.eval_shape(lambda p: init_state(tcfg.adamw, p), params_shapes)
+            oshard = {
+                "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                "m": pshard,
+                "v": pshard,
+            }
+            bshard = jax.tree.map(
+                lambda l: jax.sharding.NamedSharding(mesh, shard.batch_spec(l.shape, mesh)),
+                ins,
+            )
+            step_fn = make_train_step(cfg, tcfg)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(_sds(params_shapes), _sds(opt_shapes), ins)
+        elif kind == "prefill":
+            bshard = jax.tree.map(
+                lambda l: jax.sharding.NamedSharding(mesh, shard.batch_spec(l.shape, mesh)),
+                ins,
+            )
+            jitted = jax.jit(
+                lambda p, inputs: apply_model(p, cfg, inputs),
+                in_shardings=(pshard, bshard["inputs"]),
+            )
+            lowered = jitted.lower(_sds(params_shapes), ins["inputs"])
+        else:  # decode
+            cache_len = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+            cache_shapes = jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
+            cshard = shard.cache_shardings(cache_shapes, mesh)
+            tok = ins["inputs"]
+            tshard = jax.sharding.NamedSharding(mesh, shard.batch_spec(tok.shape, mesh))
+            scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            jitted = jax.jit(
+                lambda p, t, c, n: decode_step(p, cfg, t, c, n),
+                in_shardings=(pshard, tshard, cshard, scalar),
+                out_shardings=(None, cshard),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(
+                _sds(params_shapes), tok, _sds(cache_shapes), ins["cur_len"]
+            )
+        compiled = lowered.compile()
+    return compiled, params_shapes
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, probes: bool = True):
+    """Lower + compile one (arch, shape, mesh) cell; returns the record."""
+    spec = get_arch(arch)
+    if not spec.shape_supported(shape_name):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "why": spec.notes}
+    cfg = spec.model
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    unit = len(cfg.block_pattern)
+    repeats = cfg.repeats
+    t0 = time.time()
+    compiled, params_shapes = _lower_kind(spec, cfg, shape_name, mesh, spec.opt_dtype)
+    raw = _metrics(compiled)
+    mem = _memory(compiled)
+    t_main = time.time() - t0
+    mem_mb8 = None
+    if SHAPES[shape_name][2] == "train":
+        # production memory config: 8-way gradient accumulation (activation
+        # temps scale ~1/8; flops accounting stays on the mb=1 program)
+        c8, _ = _lower_kind(spec, cfg, shape_name, mesh, spec.opt_dtype, microbatches=8)
+        mem_mb8 = _memory(c8)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "mesh": dict(mesh.shape),
+        "seconds_to_compile": round(t_main, 1),
+        "raw": raw,
+        "memory": mem,
+        "memory_mb8": mem_mb8,
+        "params_total": int(sum(x.size for x in jax.tree.leaves(params_shapes))),
+        "repeats": repeats,
+        "unit_layers": unit,
+    }
+    if probes:
+        t1 = time.time()
+        spec1 = dataclasses.replace(
+            spec, model=dataclasses.replace(cfg, num_layers=unit, scan_unroll=True)
+        )
+        spec2 = dataclasses.replace(
+            spec, model=dataclasses.replace(cfg, num_layers=2 * unit, scan_unroll=True)
+        )
+        c1, _ = _lower_kind(spec1, spec1.model, shape_name, mesh, spec.opt_dtype)
+        m1 = _metrics(c1)
+        c2, _ = _lower_kind(spec2, spec2.model, shape_name, mesh, spec.opt_dtype)
+        m2 = _metrics(c2)
+
+        def corrected(key):
+            if key == "collective_bytes":
+                ops = set(m1[key]) | set(m2[key]) | set(raw[key])
+                out = {}
+                for op in ops:
+                    body = max(0.0, m2[key].get(op, 0) - m1[key].get(op, 0))
+                    out[op] = m1[key].get(op, 0) + (repeats - 1) * body
+                return out
+            body = max(0.0, m2[key] - m1[key])
+            return m1[key] + (repeats - 1) * body
+
+        rec["flops"] = corrected("flops")
+        rec["bytes_accessed"] = corrected("bytes_accessed")
+        rec["collective_bytes"] = corrected("collective_bytes")
+        rec["probe_seconds"] = round(time.time() - t1, 1)
+        rec["probe_r1"] = m1
+        rec["probe_r2"] = m2
+    else:
+        rec["flops"] = raw["flops"]
+        rec["bytes_accessed"] = raw["bytes_accessed"]
+        rec["collective_bytes"] = raw["collective_bytes"]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape, args.multi_pod))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape, mp in cells:
+        tag = f"{arch}_{shape}_{'pod2' if mp else 'pod1'}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[cached  ] {tag}", flush=True)
+            continue
+        try:
+            rec = lower_cell(arch, shape, mp, probes=not args.no_probes)
+        except Exception as e:  # a dry-run failure is a bug: record loudly
+            rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                   "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = (
+            f"flops/dev={rec.get('flops'):.3e} coll={sum(rec.get('collective_bytes', {}).values()):.3e}B"
+            f" compile={rec.get('seconds_to_compile')}s"
+            if status == "ok" and rec.get("flops")
+            else rec.get("why", rec.get("error", ""))
+        )
+        print(f"[{status:8s}] {tag:55s} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Single pod: 16x16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model); the pod axis is
+pure data parallelism across the DCN/ICI boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Axes used for data parallelism / FSDP."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_host_mesh(num_devices: int | None = None, axis: str = "data") -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests, examples)."""
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,))

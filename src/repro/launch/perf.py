@@ -1,0 +1,161 @@
+"""§Perf hillclimbing driver: one compile per (cell, levers) with stable
+metrics — raw cost_analysis flops + while-body-scaled collective bytes (see
+dryrun.collective_bytes_scaled; robust where the R1/R2 probe correction is
+not). Appends every measurement to benchmarks/results/perf_log.jsonl so the
+hypothesis -> change -> measure log in EXPERIMENTS.md is reproducible.
+
+  python -m repro.launch.perf --arch mixtral-8x22b --shape train_4k \
+      --tag baseline [--moe-buf dp,,model,] [--remat dots] [--last-only] ...
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_arch  # noqa: E402
+from repro.launch import sharding as shard  # noqa: E402
+from repro.launch.dryrun import (  # noqa: E402
+    _cost,
+    _memory,
+    _sds,
+    _set_constraints,
+    collective_bytes_scaled,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import layers as L  # noqa: E402
+from repro.models.transformer import apply_model, init_params  # noqa: E402
+from repro.train import AdamWConfig, TrainConfig, make_train_step  # noqa: E402
+from repro.train.optimizer import init_state  # noqa: E402
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def _parse_spec(s: str) -> P:
+    """'dp,,model,' -> P(('pod','data'?), None, 'model', None); 'dp' means
+    the data axes tuple, '' means None."""
+    parts = []
+    for tok in s.split(","):
+        if tok == "":
+            parts.append(None)
+        elif tok == "dp":
+            parts.append(("data",))
+        else:
+            parts.append(tok)
+    return P(*parts)
+
+
+def measure(arch: str, shape: str, levers: dict) -> dict:
+    spec = get_arch(arch)
+    cfg = spec.model
+    if levers.get("remat"):
+        cfg = dataclasses.replace(cfg, remat_policy=levers["remat"])
+    if levers.get("q_chunk") is not None:
+        cfg = dataclasses.replace(cfg, attn_q_chunk=levers["q_chunk"])
+    mesh = make_production_mesh(multi_pod=False)
+    seq, batch, kind = SHAPES[shape]
+    params_shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    pshard = shard.param_shardings(params_shapes, mesh)
+    ins = spec.input_specs(shape)
+    _set_constraints(cfg, mesh, seq, batch, kind)
+    for name in ("moe_buf", "moe_y", "moe_out"):
+        if levers.get(name):
+            L.set_constraint(name, NamedSharding(mesh, _parse_spec(levers[name])))
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            tcfg = TrainConfig(
+                adamw=AdamWConfig(moment_dtype=spec.opt_dtype),
+                microbatches=levers.get("microbatches", 1),
+            )
+            opt_shapes = jax.eval_shape(lambda p: init_state(tcfg.adamw, p), params_shapes)
+            oshard = {"step": NamedSharding(mesh, P()), "m": pshard, "v": pshard}
+            bshard = jax.tree.map(
+                lambda l: NamedSharding(mesh, shard.batch_spec(l.shape, mesh)), ins
+            )
+            fn = jax.jit(
+                make_train_step(cfg, tcfg),
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1),
+            )
+            compiled = fn.lower(_sds(params_shapes), _sds(opt_shapes), ins).compile()
+        elif kind == "prefill":
+            bs = NamedSharding(mesh, shard.batch_spec(ins["inputs"].shape, mesh))
+            last_only = bool(levers.get("last_only"))
+            fn = jax.jit(
+                lambda p, x: apply_model(p, cfg, x, last_only=last_only),
+                in_shardings=(pshard, bs),
+            )
+            compiled = fn.lower(_sds(params_shapes), ins["inputs"]).compile()
+        else:
+            raise NotImplementedError("decode cells not used in §Perf")
+    cost = _cost(compiled)
+    colls = collective_bytes_scaled(compiled.as_text(), cfg.repeats)
+    mem = _memory(compiled)
+    flops = float(cost.get("flops", 0.0))
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "levers": levers,
+        "compile_s": round(time.time() - t0, 1),
+        "flops_raw": flops,
+        "collective_bytes_scaled": colls,
+        "collective_total": sum(colls.values()),
+        "collective_s": sum(colls.values()) / LINK,
+        "memory": mem,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--moe-buf", default=None)
+    ap.add_argument("--moe-y", default=None)
+    ap.add_argument("--moe-out", default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--last-only", action="store_true")
+    args = ap.parse_args()
+    levers = {
+        k: v
+        for k, v in {
+            "moe_buf": args.moe_buf,
+            "moe_y": args.moe_y,
+            "moe_out": args.moe_out,
+            "remat": args.remat,
+            "q_chunk": args.q_chunk,
+            "microbatches": args.microbatches,
+            "last_only": args.last_only,
+        }.items()
+        if not (v is None or v is False or (k == "microbatches" and v == 1))
+    }
+    rec = measure(args.arch, args.shape, levers)
+    rec["tag"] = args.tag
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open("benchmarks/results/perf_log.jsonl", "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(
+        f"[{args.tag}] {args.arch}/{args.shape} flops_raw={rec['flops_raw']:.3e} "
+        f"coll={rec['collective_total']:.3e}B ({rec['collective_s']:.2f}s) "
+        f"temp={rec['memory'].get('temp_size_in_bytes', 0) / 1e9:.1f}GB "
+        f"compile={rec['compile_s']}s"
+    )
+    for op, b in sorted(rec["collective_bytes_scaled"].items(), key=lambda kv: -kv[1]):
+        print(f"    {op:20s} {b:.3e} B")
+
+
+if __name__ == "__main__":
+    main()

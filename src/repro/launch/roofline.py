@@ -1,0 +1,144 @@
+"""Roofline analysis over the dry-run records (launch/dryrun.py output).
+
+Per (arch, shape, single-pod mesh):
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+plus MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (prefill/decode)
+and the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+
+Hardware constants (TPU v5e-class, per chip): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Caveats recorded with the table:
+  * HLO bytes come from XLA's per-op cost model, which does not see through
+    fusion on the CPU backend — it over-counts HBM traffic; the memory term
+    is an upper bound.
+  * collective bytes are summed result sizes of collective ops in the SPMD
+    module (all-reduce counted once, not 2(P-1)/P ring passes).
+
+Usage: python -m repro.launch.roofline [--dir benchmarks/results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link
+
+# shapes: (seq, global_batch, kind)
+from repro.configs import SHAPES, get_arch  # noqa: E402
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D for
+    forward-only (per decoded token for decode shapes)."""
+    spec = get_arch(arch)
+    cfg = spec.model
+    seq, batch, kind = SHAPES[shape]
+    import jax
+
+    shapes = jax.eval_shape(
+        lambda k: __import__("repro.models.transformer", fromlist=["init_params"]).init_params(k, cfg),
+        jax.random.PRNGKey(0),
+    )
+    total = sum(x.size for x in jax.tree.leaves(shapes))
+    if cfg.moe is not None:
+        # subtract inactive expert params
+        m = cfg.moe
+        moe_layers = sum(1 for i in range(cfg.num_layers) if cfg.is_moe_layer(i % len(cfg.block_pattern)))
+        expert_params = moe_layers * m.num_experts * (
+            (2 * cfg.d_model * m.d_ff) + (m.d_ff * cfg.d_model)
+        )
+        active = total - expert_params + expert_params * (m.top_k / m.num_experts)
+    else:
+        active = total
+    tokens = batch * seq if kind != "decode" else batch  # decode: 1 token/seq
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active * tokens
+
+
+def load(dir_: str, multi_pod: bool = False):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        r = json.load(open(f))
+        if r.get("multi_pod") != multi_pod:
+            continue
+        recs.append(r)
+    return recs
+
+
+def analyse(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = 1
+    for v in rec["mesh"].values():
+        chips *= v
+    flops = rec["flops"]
+    comp = flops / PEAK_FLOPS
+    memb = rec["bytes_accessed"] / HBM_BW
+    collb = sum(rec["collective_bytes"].values()) / LINK_BW
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / (flops * chips) if flops else 0.0
+    dom = max((comp, "compute"), (memb, "memory"), (collb, "collective"))[1]
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "chips": chips,
+        "compute_s": comp,
+        "memory_s": memb,
+        "collective_s": collb,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": useful,  # of the compute roof, per chip
+        "temp_gb": (rec.get("memory_mb8") or rec.get("memory", {})).get("temp_size_in_bytes", 0)
+        / 1e9
+        if rec.get("memory")
+        else None,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+    rows = []
+    for rec in load(args.dir, args.multi_pod):
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"], "dominant": "N/A",
+                         "why": rec.get("why", "")})
+            continue
+        a = analyse(rec)
+        if a:
+            rows.append(a)
+        else:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"], "dominant": "FAILED",
+                         "why": rec.get("error", "")})
+    hdr = f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} {'dominant':>10s} {'useful':>7s}"
+    print(hdr)
+    for r in rows:
+        if "compute_s" in r:
+            print(
+                f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4f} {r['memory_s']:10.4f}"
+                f" {r['collective_s']:10.4f} {r['dominant']:>10s} {r['useful_ratio']:7.1%}"
+            )
+        else:
+            print(f"{r['arch']:24s} {r['shape']:12s} {'-':>10s} {'-':>10s} {'-':>10s} {r['dominant']:>10s}  {r.get('why','')[:40]}")
+    if args.csv:
+        import csv
+
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=sorted({k for r in rows for k in r}))
+            w.writeheader()
+            w.writerows(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Sharding rules: param path + shape -> PartitionSpec on the production
+mesh.
+
+Policy (baseline; §Perf iterates on it):
+  * tensor parallelism over "model": prefer head/expert/ffn dims; fall back
+    to any dim the axis divides (GSPMD inserts the reduction collectives
+    for row-parallel layouts).
+  * FSDP over "data": after TP assignment, shard the largest remaining
+    divisible dim of every >=2D param (params + Adam moments). The "pod"
+    axis stays pure DP (gradient all-reduce only crosses pods — the slow
+    DCN boundary moves bytes once per step, not per layer).
+  * batch dims of inputs/caches over ("pod","data"); long-context decode
+    (batch=1) shards the KV time axis over "data" instead.
+
+Layer-stacked params (under "blocks") carry a leading repeats dim that is
+never sharded; preference dims shift by one.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path regex, preferred dims for "model") — dims are for the UNSTACKED param
+_TP_PREFS: list[tuple[str, list[int]]] = [
+    (r"embed.*(table|out)", [0]),  # (V, D): vocab-parallel
+    (r"mixer.*w[q]", [1, 2, 0]),  # (D, H, hd)
+    (r"mixer.*w[kv]$", [1, 2, 0]),  # (D, G, hd)
+    (r"mixer.*wo", [0, 2, 1]),  # (H, hd, D)
+    (r"(ffn|dense).*w[ig]$", [1, 0]),  # (D, F) col-parallel
+    (r"(ffn|dense).*wo$", [0, 1]),  # (F, D) row-parallel
+    (r"ffn.*router", []),  # replicate router
+    (r"mixer.*(in_proj)", [1, 0]),  # mamba (D, 2di)
+    (r"mixer.*(x_proj)", [0, 1]),  # (di, r+2n)
+    (r"mixer.*(dt_proj)", [1, 0]),
+    (r"mixer.*(out_proj)", [0, 1]),
+    (r"mixer.*(A_log)", [0]),
+    (r"mixer.*conv$", [1]),
+    (r"mixer.*w[rg]$", [1, 0]),  # rwkv (D, D)
+    (r"mixer.*(wa|wb)", [0, 1]),
+]
+
+# MoE experts: (E, D, F)/(E, F, D) — expert-parallel first, then ffn dim
+_TP_PREFS.insert(0, (r"ffn.*w[ig]$__3d", [0, 2, 1]))
+_TP_PREFS.insert(0, (r"ffn.*wo$__3d", [0, 1, 2]))
+
+
+def _prefs_for(path: str, ndim: int) -> list[int]:
+    for pat, dims in _TP_PREFS:
+        if pat.endswith("__3d"):
+            if ndim == 3 and re.search(pat[: -len("__3d")], path):
+                return dims
+            continue
+        if re.search(pat, path):
+            return dims
+    return list(range(ndim))  # no named rule: any divisible dim
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """TP + FSDP spec for one param leaf. `path` is normalized from
+    jax.tree_util.keystr form ("['blocks'][0]['ffn']['wi']") to dotted
+    ("blocks.0.ffn.wi") so the rule regexes can anchor on leaf names."""
+    path = ".".join(re.findall(r"\w+", path))
+    model_n = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    data_n = mesh.shape["data"] if "data" in mesh.axis_names else 1
+    stacked = path.startswith("blocks") or ".blocks." in f".{path}."
+    off = 1 if stacked else 0
+    ndim = len(shape)
+    if ndim - off < 1:
+        return P()
+    spec: list = [None] * ndim
+
+    # §Perf H5: attention projections shard on the *heads* dim or not at
+    # all. Falling back to head_dim makes QK^T contract a sharded-vs-
+    # unsharded (or doubly-sharded) dim => per-layer fp32 score all-reduces
+    # (measured 2.2 TB/step/device on mixtral train_4k).
+    if re.search(r"mixer.*(wq|wk|wv)$", path) and ndim - off == 3:
+        if shape[off + 1] % model_n == 0 and shape[off + 1] >= model_n:
+            spec[off + 1] = "model"
+        if shape[off] % data_n == 0:
+            spec[off] = "data"
+        return P(*spec)
+    if re.search(r"mixer.*wo$", path) and ndim - off == 3:
+        if shape[off] % model_n == 0 and shape[off] >= model_n:
+            spec[off] = "model"
+        if shape[off + 2] % data_n == 0:
+            spec[off + 2] = "data"
+        return P(*spec)
+
+    # MoE expert weights: expert-parallel when E divides the model axis,
+    # otherwise ffn-dim tensor parallel + FSDP over data on the other dim.
+    # (H4 — sharding F jointly over (model, data) — fixed the weight-grad
+    # gathers but broke the forward: refuted, see EXPERIMENTS.md §Perf.)
+    if re.search(r"ffn.*(wi|wg|wo)$", path) and ndim - off == 3:
+        fdim = off + 2 if re.search(r"w[ig]$", path) else off + 1
+        other = off + 1 if fdim == off + 2 else off + 2
+        if shape[off] % model_n == 0 and shape[off] >= model_n:
+            spec[off] = "model"
+            rest = [d for d in (off + 1, off + 2) if shape[d] % data_n == 0]
+            if rest:
+                spec[max(rest, key=lambda i: shape[i])] = "data"
+        elif shape[fdim] % model_n == 0:
+            spec[fdim] = "model"
+            if shape[other] % data_n == 0:
+                spec[other] = "data"
+        return P(*spec)
+
+    body = list(range(off, ndim))
+    prefs = [d + off for d in _prefs_for(path, ndim - off)]
+    # tensor parallel over "model"
+    tp_dim = None
+    for d in prefs:
+        if d < ndim and shape[d] % model_n == 0 and shape[d] >= model_n:
+            spec[d] = "model"
+            tp_dim = d
+            break
+    # FSDP over "data": largest remaining divisible dim
+    if ndim - off >= 2 or tp_dim is None:
+        cands = [d for d in body if d != tp_dim and shape[d] % data_n == 0 and shape[d] >= data_n]
+        if cands:
+            d = max(cands, key=lambda i: shape[i])
+            spec[d] = "data"
+    return P(*spec)
+
+
+def param_shardings(params_shapes, mesh: Mesh):
+    """Pytree of NamedSharding matching a pytree of ShapeDtypeStructs."""
+    flat, treedef = jax.tree.flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(jax.tree_util.keystr(path), leaf.shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree.unflatten(treedef, out)
+
+
+def batch_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Inputs (B, S[, D]): batch over (pod, data) when divisible; batch=1
+    long-context shards the sequence dim over data instead."""
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+    if shape[0] % dp_n == 0 and shape[0] >= dp_n:
+        return P(tuple(dp), *([None] * (len(shape) - 1)))
+    if shape[0] % mesh.shape.get("data", 1) == 0 and shape[0] >= mesh.shape.get("data", 1):
+        return P("data", *([None] * (len(shape) - 1)))
+    if len(shape) > 1 and shape[1] % mesh.shape.get("data", 1) == 0:
+        return P(None, "data", *([None] * (len(shape) - 2)))
+    return P(*([None] * len(shape)))
+
+
+def cache_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Decode caches, stacked (R, B, T, ...) or (R, B, ...): batch over
+    (pod,data) if divisible else time over data; heads over model."""
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+    data_n = mesh.shape.get("data", 1)
+    model_n = mesh.shape.get("model", 1)
+    spec: list = [None] * len(shape)
+    used_data = False
+    if len(shape) >= 2 and shape[1] % dp_n == 0 and shape[1] >= dp_n:
+        spec[1] = tuple(dp)
+        used_data = True
+    elif len(shape) >= 3 and shape[2] % data_n == 0 and shape[2] >= data_n:
+        spec[2] = "data"  # shard KV time axis (long-context, batch=1)
+        used_data = True
+    # shard a heads/feature dim over model: prefer dims after time
+    for d in range(len(shape) - 1, 1, -1):
+        if spec[d] is None and shape[d] % model_n == 0 and shape[d] >= model_n:
+            spec[d] = "model"
+            break
+    del used_data
+    return P(*spec)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, cache_spec(l.shape, mesh)), cache_shapes
+    )

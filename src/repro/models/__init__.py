@@ -1,0 +1,13 @@
+from repro.models.transformer import ModelConfig, MoEConfig, init_params, apply_model
+from repro.models import layers, attention, moe, ssm
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "init_params",
+    "apply_model",
+    "layers",
+    "attention",
+    "moe",
+    "ssm",
+]

@@ -1,0 +1,142 @@
+"""Grouped-query attention with the knobs the assigned archs need:
+GQA/MQA kv-head counts, head_dim overrides (gemma: 256), qk-norm (qwen3),
+QKV bias (qwen2), sliding windows (mixtral), RoPE theta, causal masking,
+and a decode path over a preallocated KV cache.
+
+Shapes: x (B, S, D); q (B, S, H, hd); kv (B, S, Hkv, hd); H % Hkv == 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None  # None = full causal
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    kq, kk, kv, ko, kn1, kn2 = jax.random.split(key, 6)
+    h, g, d, hd = cfg.num_heads, cfg.num_kv_heads, cfg.d_model, cfg.head_dim
+    p = {
+        "wq": layers._init_dense(kq, (d, h, hd), d, dtype),
+        "wk": layers._init_dense(kk, (d, g, hd), d, dtype),
+        "wv": layers._init_dense(kv, (d, g, hd), d, dtype),
+        "wo": layers._init_dense(ko, (h, hd, d), h * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((g, hd), dtype)
+        p["bv"] = jnp.zeros((g, hd), dtype)
+    if cfg.qk_norm:
+        p["qnorm"] = layers.rmsnorm_init(hd, dtype)
+        p["knorm"] = layers.rmsnorm_init(hd, dtype)
+    return p
+
+
+def _qkv(p, cfg: AttnConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(p["qnorm"], q)
+        k = layers.rmsnorm(p["knorm"], k)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: AttnConfig):
+    """q (B,S,H,hd), k/v (B,T,G,hd). Grouped: fold H into (G, H/G)."""
+    b, s, h, hd = q.shape
+    g = k.shape[2]
+    q = q.reshape(b, s, g, h // g, hd)
+    scores = jnp.einsum("bsgmk,btgk->bgmst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgmst,btgk->bsgmk", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def attn_apply(p, cfg: AttnConfig, x, positions, q_chunk: int = 0):
+    """Full-sequence causal attention (train / prefill).
+
+    With q_chunk > 0 and seq divisible, queries are processed in chunks of
+    q_chunk rows (lax.scan): peak score memory drops from O(S^2) to
+    O(q_chunk * S) per head — the long-sequence prefill shapes do not fit
+    otherwise. (A Pallas flash kernel is the TPU endgame; chunking already
+    removes the quadratic buffer, which is what the dry-run memory model
+    sees.)"""
+    q, k, v = _qkv(p, cfg, x, positions)
+    s = x.shape[1]
+    j = jnp.arange(s)[None, :]
+    if q_chunk and s > q_chunk and s % q_chunk == 0:
+        nc = s // q_chunk
+        qc = q.reshape(q.shape[0], nc, q_chunk, *q.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+        def one(carry, args):
+            ci, qblk = args
+            i = ci * q_chunk + jnp.arange(q_chunk)[:, None]
+            mask = j <= i
+            if cfg.sliding_window is not None:
+                mask = mask & (j > i - cfg.sliding_window)
+            mask = jnp.broadcast_to(mask, (x.shape[0], q_chunk, s))
+            return carry, _sdpa(qblk, k, v, mask, cfg)
+
+        _, outs = jax.lax.scan(one, None, (jnp.arange(nc), qc))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(x.shape[0], s, q.shape[2], q.shape[3])
+    else:
+        i = jnp.arange(s)[:, None]
+        mask = j <= i
+        if cfg.sliding_window is not None:
+            mask = mask & (j > i - cfg.sliding_window)
+        mask = jnp.broadcast_to(mask, (x.shape[0], s, s))
+        out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attn_decode(p, cfg: AttnConfig, x, cache_k, cache_v, cur_len):
+    """One-token decode. x (B, 1, D); cache_k/v (B, T, G, hd); cur_len ()
+    or (B,) int32 = per-sequence number of valid cache positions (vector
+    form supports continuous batching of mixed-length requests).
+    Returns (out, new_k, new_v).
+
+    With a sliding window the cache is a rotating buffer of window size W:
+    the new token overwrites slot cur_len % W.
+    """
+    b = x.shape[0]
+    t = cache_k.shape[1]
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    q, k, v = _qkv(p, cfg, x, cur[:, None])  # RoPE at absolute positions
+    if cfg.sliding_window is not None:
+        slot = cur % t
+    else:
+        slot = jnp.minimum(cur, t - 1)
+    bi = jnp.arange(b)
+    cache_k = cache_k.at[bi, slot].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bi, slot].set(v[:, 0].astype(cache_v.dtype))
+    j = jnp.arange(t)[None, :]
+    if cfg.sliding_window is not None:
+        valid = (j <= slot[:, None]) | (cur[:, None] >= t)  # full rotating buffer
+    else:
+        valid = j <= slot[:, None]
+    mask = valid[:, None, :]
+    out = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), cache_k, cache_v

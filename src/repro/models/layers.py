@@ -1,0 +1,145 @@
+"""Core NN layers (pure functions over param pytrees, jnp only).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take an rng key.
+  * compute dtype is the dtype of the activations passed in; norms and
+    softmax run in fp32 and cast back (mixed-precision policy).
+  * all matmuls are einsums with explicit dimension letters, so sharding
+    rules in launch/sharding.py can target them by param path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _init_dense(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(in_axis_size)
+    return (jax.random.uniform(key, shape, jnp.float32, -1.0, 1.0) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32) - 1.0)).astype(x.dtype) * 1.0
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.exp(-jnp.arange(0, d, 2, dtype=jnp.float32) / d * math.log(theta))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    act: str = "swiglu"  # swiglu | geglu | gelu
+
+
+def mlp_init(key, cfg: MLPConfig, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.act in ("swiglu", "geglu")
+    p = {
+        "wi": _init_dense(k1, (cfg.d_model, cfg.d_ff), cfg.d_model, dtype),
+        "wo": _init_dense(k2, (cfg.d_ff, cfg.d_model), cfg.d_ff, dtype),
+    }
+    if gated:
+        p["wg"] = _init_dense(k3, (cfg.d_model, cfg.d_ff), cfg.d_model, dtype)
+    return p
+
+
+def mlp_apply(p, x, act: str = "swiglu"):
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(x.dtype))
+    if act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    elif act == "geglu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(x.dtype))
+        h = jax.nn.gelu(g, approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d_model), jnp.float32).astype(dtype) * 0.02}
+
+
+def embed_apply(p, tokens: jnp.ndarray, compute_dtype):
+    return jnp.take(p["table"].astype(compute_dtype), tokens, axis=0)
+
+
+# -- activation sharding constraints (set by the launcher; no-ops on CPU) ---
+# GSPMD propagation alone re-replicates some large activations (notably
+# logits); the launcher pins the ones that matter here. This is a first-class
+# perf lever: see EXPERIMENTS.md §Perf.
+_CONSTRAINTS: dict[str, object] = {}
+
+
+def set_constraint(name: str, sharding) -> None:
+    _CONSTRAINTS[name] = sharding
+
+
+def clear_constraints() -> None:
+    _CONSTRAINTS.clear()
+
+
+def constrain(x: jnp.ndarray, name: str) -> jnp.ndarray:
+    s = _CONSTRAINTS.get(name)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def unembed_apply(p, x, tied: bool):
+    table = p["table"] if tied else p["out"]
+    # logits in fp32 (loss stability at 256k vocab), kept vocab-sharded
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32))
+    return constrain(logits, "logits")

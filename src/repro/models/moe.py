@@ -1,0 +1,142 @@
+"""Mixture-of-Experts with capacity-bounded scatter dispatch.
+
+Relational note (DESIGN.md §5): top-k routing is a join between the token
+table and the expert table, and the dispatch below is exactly the GHT build
+primitive from the join engine — rank tokens within each expert group
+(cumsum over a one-hot = the group-by rank in core/colt.py) and scatter
+them into per-expert CSR-like buffers. Tokens beyond an expert's capacity
+are dropped (residual connection carries them), the standard TPU-MoE
+trade that keeps every shape static — the same capacity-with-overflow
+discipline the compiled join engine uses for its frontier.
+
+Supports top-k routing with renormalized gates, capacity factor, optional
+dense residual branch (snowflake-arctic style), expert-parallel sharding
+(experts dim is sharded over the `model`/`expert` mesh axis by the rules in
+launch/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int = 2
+    d_ff: int = 0  # expert hidden size
+    capacity_factor: float = 1.25
+    dense_residual: bool = False
+    d_ff_dense: int = 0  # hidden size of the dense residual branch
+    every_n: int = 1  # MoE every n-th layer (jamba: 2)
+    act: str = "swiglu"
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    kr, ki, kg, ko, kd = jax.random.split(key, 5)
+    e, f = cfg.num_experts, cfg.d_ff
+    p = {
+        "router": layers._init_dense(kr, (d_model, e), d_model, jnp.float32),
+        "wi": layers._init_dense(ki, (e, d_model, f), d_model, dtype),
+        "wg": layers._init_dense(kg, (e, d_model, f), d_model, dtype),
+        "wo": layers._init_dense(ko, (e, f, d_model), f, dtype),
+    }
+    if cfg.dense_residual:
+        p["dense"] = layers.mlp_init(
+            kd, layers.MLPConfig(d_model, cfg.d_ff_dense or 2 * d_model, cfg.act), dtype
+        )
+    return p
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(4, c)
+
+
+# §Perf H6: expert matmuls with compute-dtype backward accumulation. The
+# default transpose accumulates partials in f32, so the (B,E,C,D) grad
+# all-reduce over the model axis moves 2x the bytes. Casting the cotangent
+# and forcing preferred_element_type keeps that reduce in bf16 (standard
+# for activation grads); weight grads still accumulate in f32.
+from functools import partial as _partial  # noqa: E402
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _expert_mm(buf, w, sub: str):  # "in": becd,edf->becf | "out": becf,efd->becd
+    eq = "becd,edf->becf" if sub == "in" else "becf,efd->becd"
+    # compute-dtype accumulation: the "out" matmul contracts the TP-sharded
+    # ffn dim, so its partial sums cross the model axis — keep them bf16
+    return jnp.einsum(eq, buf, w, preferred_element_type=buf.dtype)
+
+
+def _expert_mm_fwd(buf, w, sub: str):
+    return _expert_mm(buf, w, sub), (buf, w)
+
+
+def _expert_mm_bwd(sub, res, g):
+    buf, w = res
+    g = g.astype(buf.dtype)
+    if sub == "in":
+        dbuf = jnp.einsum("becf,edf->becd", g, w, preferred_element_type=buf.dtype)
+        dw = jnp.einsum("becd,becf->edf", buf, g, preferred_element_type=jnp.float32)
+    else:
+        dbuf = jnp.einsum("becd,efd->becf", g, w, preferred_element_type=buf.dtype)
+        dw = jnp.einsum("becf,becd->efd", buf, g, preferred_element_type=jnp.float32)
+    return dbuf, dw.astype(w.dtype)
+
+
+_expert_mm.defvjp(_expert_mm_fwd, _expert_mm_bwd)
+
+
+def moe_apply(p, cfg: MoEConfig, x: jnp.ndarray):
+    """x: (B, S, D). Dispatch groups are the batch dim (sharded over data),
+    so capacity is per-sequence-group and no cross-device rank is needed."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = _capacity(s, cfg)
+
+    gates = jax.nn.softmax(
+        jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"]), axis=-1
+    )
+    topv, tope = jax.lax.top_k(gates, k)  # (B, S, k)
+    topv = topv / jnp.clip(topv.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    def dispatch_one(xg, eg, vg):
+        # xg (S, D); eg/vg (S, k) -> expert buffers (E, cap, D), combine meta
+        flat_e = eg.reshape(-1)  # (S*k,) in token-major order
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1  # rank within expert group
+        pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        keep = pos < cap
+        tok = jnp.repeat(jnp.arange(s), k)
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        buf = buf.at[
+            jnp.where(keep, flat_e, e), jnp.where(keep, pos, 0)
+        ].add(xg[tok], mode="drop")
+        return buf, (flat_e, pos, keep, tok, vg.reshape(-1))
+
+    buf, meta = jax.vmap(dispatch_one)(x, tope, topv)  # (B, E, cap, D)
+    buf = layers.constrain(buf, "moe_buf")
+
+    h = _expert_mm(buf, p["wi"].astype(x.dtype), "in")
+    g = _expert_mm(buf, p["wg"].astype(x.dtype), "in")
+    h = jax.nn.silu(g) * h if cfg.act == "swiglu" else jax.nn.gelu(g, approximate=True) * h
+    out = _expert_mm(h, p["wo"].astype(x.dtype), "out")  # (B, E, cap, D)
+    out = layers.constrain(out, "moe_out")
+
+    def combine_one(outg, m):
+        flat_e, pos, keep, tok, w = m
+        gathered = outg[jnp.where(keep, flat_e, 0), jnp.where(keep, pos, 0)]
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        y = jnp.zeros((s, d), x.dtype).at[tok].add(gathered * w[:, None].astype(x.dtype))
+        return y
+
+    y = jax.vmap(combine_one)(out, meta)
+    y = layers.constrain(y, "moe_y")
+    if cfg.dense_residual:
+        y = y + layers.mlp_apply(p["dense"], x, cfg.act)
+    return y

@@ -1,0 +1,261 @@
+"""State-space & linear-attention blocks: Mamba (jamba's SSM half) and
+RWKV-6 "Finch" (data-dependent decay).
+
+Both are written as chunked/sequential scans with O(1) per-step state so
+the `long_500k` decode shape is genuinely sub-quadratic:
+  * Mamba: selective SSM. Full-seq path = lax.scan over chunks carrying the
+    (B, d_inner, N) state, associative_scan inside each chunk (bounded
+    transients instead of a (B, S, d_inner, N) blow-up).
+  * RWKV-6: per-head matrix state S (hd x hd) with data-dependent diagonal
+    decay w_t = exp(-exp(...)), token-shift mixing, bonus u, per-head
+    group-norm. Full-seq path = lax.scan over time; decode carries
+    (x_prev, S) only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_inner: int  # usually 2 * d_model
+    d_state: int = 16
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or max(1, math.ceil(self.d_model / 16))
+
+
+def mamba_init(key, cfg: MambaConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    di, n, r = cfg.d_inner, cfg.d_state, cfg.rank
+    return {
+        "in_proj": layers._init_dense(ks[0], (cfg.d_model, 2 * di), cfg.d_model, dtype),
+        "conv": layers._init_dense(ks[1], (cfg.conv_width, di), cfg.conv_width, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": layers._init_dense(ks[2], (di, r + 2 * n), di, dtype),
+        "dt_proj": layers._init_dense(ks[3], (r, di), r, dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers._init_dense(ks[4], (di, cfg.d_model), di, dtype),
+    }
+
+
+def _mamba_scan(da, dbx, cfg: MambaConfig):
+    """da, dbx: (B, S, di, N) decay and input terms. Chunked linear scan:
+    h_t = da_t * h_{t-1} + dbx_t. Returns h over all t."""
+    b, s, di, n = da.shape
+    ck = min(cfg.chunk, s)
+    nc = s // ck
+    assert nc * ck == s, f"seq {s} must be divisible by chunk {ck}"
+    da_c = da.reshape(b, nc, ck, di, n).transpose(1, 0, 2, 3, 4)
+    dbx_c = dbx.reshape(b, nc, ck, di, n).transpose(1, 0, 2, 3, 4)
+
+    def chunk_step(h0, inputs):
+        a, bx = inputs  # (B, ck, di, N)
+
+        def comb(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, a2 * b1 + b2
+
+        aa, bb = jax.lax.associative_scan(comb, (a, bx), axis=1)
+        h = aa * h0[:, None] + bb  # (B, ck, di, N)
+        return h[:, -1], h
+
+    h_last, hs = jax.lax.scan(chunk_step, jnp.zeros((b, di, n), da.dtype), (da_c, dbx_c))
+    return hs.transpose(1, 0, 2, 3, 4).reshape(b, s, di, n)
+
+
+def mamba_apply(p, cfg: MambaConfig, x):
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, S, di)
+    # causal depthwise conv, window w
+    w = cfg.conv_width
+    pad = jnp.pad(xi, ((0, 0), (w - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + s] * p["conv"][i].astype(x.dtype) for i in range(w)
+    ) + p["conv_b"].astype(x.dtype)
+    xi = jax.nn.silu(conv)
+    dbc = jnp.einsum("bsi,ie->bse", xi, p["x_proj"].astype(x.dtype))
+    dt, bmat, cmat = jnp.split(dbc, [cfg.rank, cfg.rank + cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt, p["dt_proj"].astype(x.dtype))
+        + p["dt_bias"].astype(x.dtype)
+    ).astype(jnp.float32)
+    a = -jnp.exp(p["A_log"])  # (di, N)
+    da = jnp.exp(dt[..., None] * a)  # (B, S, di, N)
+    dbx = (dt * xi.astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[..., None, :]
+    h = _mamba_scan(da.astype(jnp.float32), dbx, cfg)
+    y = jnp.einsum("bsin,bsn->bsi", h, cmat.astype(jnp.float32))
+    y = (y + p["D"] * xi.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+def mamba_decode(p, cfg: MambaConfig, x, conv_buf, h):
+    """One-step decode. x (B, 1, D); conv_buf (B, w-1, di); h (B, di, N).
+    Returns (y, conv_buf, h)."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    w = cfg.conv_width
+    window = jnp.concatenate([conv_buf, xi], axis=1)  # (B, w, di)
+    conv = jnp.einsum("bwi,wi->bi", window, p["conv"].astype(x.dtype)) + p["conv_b"].astype(x.dtype)
+    xi1 = jax.nn.silu(conv)[:, None]  # (B, 1, di)
+    dbc = jnp.einsum("bsi,ie->bse", xi1, p["x_proj"].astype(x.dtype))
+    dt, bmat, cmat = jnp.split(dbc, [cfg.rank, cfg.rank + cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt, p["dt_proj"].astype(x.dtype)) + p["dt_bias"].astype(x.dtype)
+    ).astype(jnp.float32)[:, 0]
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt[..., None] * a)  # (B, di, N)
+    dbx = (dt * xi1[:, 0].astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[:, 0][:, None, :]
+    h = da * h + dbx
+    y = jnp.einsum("bin,bn->bi", h, cmat.astype(jnp.float32)[:, 0])
+    y = (y + p["D"] * xi1[:, 0].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"].astype(x.dtype))[:, None]
+    return out, window[:, 1:], h
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    num_heads: int  # head_dim = d_model // num_heads
+    decay_lora: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+def rwkv6_init(key, cfg: RWKV6Config, dtype=jnp.float32):
+    ks = jax.random.split(key, 10)
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),  # token-shift mixes for r,k,v,w,g
+        "wr": layers._init_dense(ks[0], (d, d), d, dtype),
+        "wk": layers._init_dense(ks[1], (d, d), d, dtype),
+        "wv": layers._init_dense(ks[2], (d, d), d, dtype),
+        "wg": layers._init_dense(ks[3], (d, d), d, dtype),
+        "w0": jnp.zeros((d,), jnp.float32) - 4.0,  # base decay
+        "wa": layers._init_dense(ks[4], (d, cfg.decay_lora), d, dtype),
+        "wb": layers._init_dense(ks[5], (cfg.decay_lora, d), cfg.decay_lora, dtype),
+        "u": jnp.zeros((h, hd), jnp.float32),  # bonus
+        "wo": layers._init_dense(ks[6], (d, d), d, dtype),
+        "ln_x": layers.layernorm_init(hd, dtype),  # per-head group norm
+    }
+
+
+def _rwkv6_proj(p, cfg: RWKV6Config, x, x_prev):
+    """Token-shifted projections. x, x_prev: (B, S, D) where x_prev is x
+    shifted right by one (or the carried last token in decode)."""
+    mu = p["mu"].astype(x.dtype)
+    mix = [x + mu[i] * (x_prev - x) for i in range(5)]
+    r = jnp.einsum("bsd,de->bse", mix[0], p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", mix[1], p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", mix[2], p["wv"].astype(x.dtype))
+    # data-dependent decay (the Finch headline): w_t = exp(-exp(w0 + lora))
+    lora = jnp.einsum(
+        "bsd,dr,re->bse",
+        jnp.tanh(mix[3]),
+        p["wa"].astype(x.dtype),
+        p["wb"].astype(x.dtype),
+    )
+    w = jnp.exp(-jnp.exp(p["w0"] + lora.astype(jnp.float32)))  # (B,S,D) in (0,1)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix[4], p["wg"].astype(x.dtype)))
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    shp = (b, s, h, hd)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp), w.reshape(shp), g)
+
+
+def _wkv_step(state, inputs, u):
+    """state (B, H, hd, hd); r,k,v,w (B, H, hd). Returns out (B, H, hd)."""
+    r, k, v, w = inputs
+    kv = k[..., :, None] * v[..., None, :]  # (B,H,hd,hd)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[..., :, None] * kv)
+    state = w[..., :, None] * state + kv
+    return state, out
+
+
+def rwkv6_apply(p, cfg: RWKV6Config, x):
+    """x: (B, S, D) -> (B, S, D). Sequential lax.scan over time."""
+    b, s, d = x.shape
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, g = _rwkv6_proj(p, cfg, x, x_prev)
+    u = p["u"]
+    rt = r.transpose(1, 0, 2, 3).astype(jnp.float32)
+    kt = k.transpose(1, 0, 2, 3).astype(jnp.float32)
+    vt = v.transpose(1, 0, 2, 3).astype(jnp.float32)
+    wt = w.transpose(1, 0, 2, 3).astype(jnp.float32)
+    state0 = jnp.zeros((b, cfg.num_heads, cfg.head_dim, cfg.head_dim), jnp.float32)
+    _, outs = jax.lax.scan(lambda st, inp: _wkv_step(st, inp, u), state0, (rt, kt, vt, wt))
+    out = outs.transpose(1, 0, 2, 3)  # (B, S, H, hd)
+    out = layers.layernorm(p["ln_x"], out.astype(x.dtype))
+    out = (out.reshape(b, s, d) * g.reshape(b, s, d)).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", out, p["wo"].astype(x.dtype))
+
+
+def rwkv6_decode(p, cfg: RWKV6Config, x, x_prev, state):
+    """One-step decode. x (B, 1, D); x_prev (B, 1, D); state (B,H,hd,hd).
+    Returns (out, new_x_prev, new_state)."""
+    b, _, d = x.shape
+    r, k, v, w, g = _rwkv6_proj(p, cfg, x, x_prev)
+    state, out = _wkv_step(
+        state,
+        (
+            r[:, 0].astype(jnp.float32),
+            k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32),
+            w[:, 0].astype(jnp.float32),
+        ),
+        p["u"],
+    )
+    out = layers.layernorm(p["ln_x"], out[:, None].astype(x.dtype))
+    out = (out.reshape(b, 1, d) * g.reshape(b, 1, d)).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", out, p["wo"].astype(x.dtype)), x, state
+
+
+def rwkv6_ffn_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d_model), dtype),
+        "wk": layers._init_dense(k1, (d_model, d_ff), d_model, dtype),
+        "wv": layers._init_dense(k2, (d_ff, d_model), d_ff, dtype),
+        "wr": layers._init_dense(k3, (d_model, d_model), d_model, dtype),
+    }
+
+
+def rwkv6_ffn(p, x, x_prev):
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0] * (x_prev - x)
+    xr = x + mu[1] * (x_prev - x)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype)))
+    return r * kv

@@ -1,0 +1,284 @@
+"""Composable decoder-only LM covering all 10 assigned architectures.
+
+A model is `num_layers` blocks; block i's mixer type comes from the
+repeating `block_pattern` (("attn",) for dense archs, ("attn",) + 7*("mamba",)
+for jamba, ("rwkv",) for rwkv6). The FFN of block i is MoE when
+`moe.every_n` divides (i+1). Layers are *scanned* over repeats of the
+pattern unit ("superblock") so HLO size and compile time stay O(pattern),
+not O(num_layers) — essential for the 72-layer dry-run configs. Each
+superblock is wrapped in jax.checkpoint (remat).
+
+Modality frontends ([vlm]/[audio]) are stubs by assignment: `apply_model`
+accepts either int32 token ids (embedded here) or precomputed float
+embeddings (B, S, D) from input_specs().
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, ssm
+from repro.models.moe import MoEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    act: str = "swiglu"
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    moe: MoEConfig | None = None
+    block_pattern: tuple[str, ...] = ("attn",)
+    d_state: int = 16  # mamba
+    frontend: str = "none"  # none | vlm | audio (stub: embeddings in)
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "none"  # none (recompute all) | dots (save matmul outs)
+    attn_q_chunk: int = 1024  # query-chunked attention above this seq len
+    scan_unroll: bool = False  # dry-run flops probes unroll the layer scan
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def repeats(self) -> int:
+        assert self.num_layers % len(self.block_pattern) == 0, (
+            f"{self.num_layers} layers not divisible by pattern {self.block_pattern}"
+        )
+        return self.num_layers // len(self.block_pattern)
+
+    @property
+    def attn_cfg(self) -> attention.AttnConfig:
+        return attention.AttnConfig(
+            d_model=self.d_model,
+            num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads,
+            head_dim=self.hd,
+            qk_norm=self.qk_norm,
+            qkv_bias=self.qkv_bias,
+            rope_theta=self.rope_theta,
+            sliding_window=self.sliding_window,
+        )
+
+    @property
+    def mamba_cfg(self) -> ssm.MambaConfig:
+        return ssm.MambaConfig(d_model=self.d_model, d_inner=2 * self.d_model, d_state=self.d_state)
+
+    @property
+    def rwkv_cfg(self) -> ssm.RWKV6Config:
+        return ssm.RWKV6Config(d_model=self.d_model, num_heads=self.num_heads)
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.moe is not None and (i % self.moe.every_n) == (self.moe.every_n - 1)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+def _norm_init(cfg: ModelConfig):
+    return (
+        layers.rmsnorm_init(cfg.d_model, cfg.pdtype())
+        if cfg.norm == "rmsnorm"
+        else layers.layernorm_init(cfg.d_model, cfg.pdtype())
+    )
+
+
+def _norm_apply(cfg: ModelConfig, p, x):
+    return layers.rmsnorm(p, x) if cfg.norm == "rmsnorm" else layers.layernorm(p, x)
+
+
+def _init_block(key, cfg: ModelConfig, pos: int):
+    """One block at pattern position `pos` (layer index pos within a unit)."""
+    kind = cfg.block_pattern[pos]
+    kmix, kffn = jax.random.split(key)
+    dt = cfg.pdtype()
+    p: dict[str, Any] = {"ln1": _norm_init(cfg), "ln2": _norm_init(cfg)}
+    if kind == "attn":
+        p["mixer"] = attention.attn_init(kmix, cfg.attn_cfg, dt)
+    elif kind == "mamba":
+        p["mixer"] = ssm.mamba_init(kmix, cfg.mamba_cfg, dt)
+    elif kind == "rwkv":
+        p["mixer"] = ssm.rwkv6_init(kmix, cfg.rwkv_cfg, dt)
+    else:
+        raise ValueError(kind)
+    if kind == "rwkv":
+        p["ffn"] = ssm.rwkv6_ffn_init(kffn, cfg.d_model, cfg.d_ff, dt)
+    elif cfg.is_moe_layer(pos):
+        p["ffn"] = moe.moe_init(kffn, cfg.d_model, cfg.moe, dt)
+    else:
+        p["ffn"] = layers.mlp_init(kffn, layers.MLPConfig(cfg.d_model, cfg.d_ff, cfg.act), dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.moe is not None:
+        assert len(cfg.block_pattern) % cfg.moe.every_n == 0 or len(cfg.block_pattern) == 1
+    ke, ku, kb = jax.random.split(key, 3)
+    params: dict[str, Any] = {"embed": layers.embed_init(ke, cfg.vocab, cfg.d_model, cfg.pdtype())}
+    if not cfg.tie_embeddings:
+        params["embed"]["out"] = (
+            jax.random.normal(ku, (cfg.vocab, cfg.d_model), jnp.float32).astype(cfg.pdtype()) * 0.02
+        )
+    params["final_norm"] = _norm_init(cfg)
+    unit = len(cfg.block_pattern)
+
+    def init_unit(k):
+        kk = jax.random.split(k, unit)
+        return tuple(_init_block(kk[p], cfg, p) for p in range(unit))
+
+    params["blocks"] = jax.vmap(init_unit)(jax.random.split(kb, cfg.repeats))
+    return params
+
+
+def _block_apply(cfg: ModelConfig, pos: int, p, x, positions):
+    kind = cfg.block_pattern[pos]
+    h = _norm_apply(cfg, p["ln1"], x)
+    if kind == "attn":
+        h = attention.attn_apply(p["mixer"], cfg.attn_cfg, h, positions, cfg.attn_q_chunk)
+    elif kind == "mamba":
+        h = ssm.mamba_apply(p["mixer"], cfg.mamba_cfg, h)
+    else:
+        h = ssm.rwkv6_apply(p["mixer"], cfg.rwkv_cfg, h)
+    x = x + h
+    h = _norm_apply(cfg, p["ln2"], x)
+    if kind == "rwkv":
+        h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        h = ssm.rwkv6_ffn(p["ffn"], h, h_prev)
+    elif cfg.is_moe_layer(pos):
+        h = moe.moe_apply(p["ffn"], cfg.moe, h)
+    else:
+        h = layers.mlp_apply(p["ffn"], h, cfg.act)
+    return x + h
+
+
+def apply_model(params, cfg: ModelConfig, inputs, positions=None, last_only: bool = False):
+    """inputs: int32 token ids (B, S) or float embeddings (B, S, D).
+    Returns fp32 logits (B, S, vocab)."""
+    cdt = cfg.cdtype()
+    if jnp.issubdtype(inputs.dtype, jnp.integer):
+        x = layers.embed_apply(params["embed"], inputs, cdt)
+    else:
+        x = inputs.astype(cdt)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def unit_apply(x, unit_params):
+        x = layers.constrain(x, "act")
+        for pos in range(len(cfg.block_pattern)):
+            x = _block_apply(cfg, pos, unit_params[pos], x, positions)
+        return x, None
+
+    body = unit_apply
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots"
+            else None  # recompute everything: only unit inputs are saved
+        )
+        body = jax.checkpoint(unit_apply, policy=policy)
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+    x = _norm_apply(cfg, params["final_norm"], x)
+    if last_only:
+        # serving prefill: only the final position's logits are needed —
+        # skips the (tokens x vocab) logits tensor and its collectives
+        x = x[:, -1:]
+    return layers.unembed_apply(params["embed"], x, cfg.tie_embeddings)
+
+
+# ---------------------------------------------------------------------------
+# decode path with per-block caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Cache pytree: tuple over pattern positions; leaves stacked (R, ...).
+    attn -> (k, v); mamba -> (conv_buf, h); rwkv -> (x_prev, state)."""
+    dtype = dtype or cfg.cdtype()
+    r = cfg.repeats
+    caches = []
+    for kind in cfg.block_pattern:
+        if kind == "attn":
+            w = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+            shape = (r, batch, w, cfg.num_kv_heads, cfg.hd)
+            caches.append((jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)))
+        elif kind == "mamba":
+            m = cfg.mamba_cfg
+            caches.append(
+                (
+                    jnp.zeros((r, batch, m.conv_width - 1, m.d_inner), dtype),
+                    jnp.zeros((r, batch, m.d_inner, m.d_state), jnp.float32),
+                )
+            )
+        else:  # rwkv: (x_prev time-mix, x_prev ffn, wkv state)
+            rc = cfg.rwkv_cfg
+            caches.append(
+                (
+                    jnp.zeros((r, batch, 1, cfg.d_model), dtype),
+                    jnp.zeros((r, batch, 1, cfg.d_model), dtype),
+                    jnp.zeros((r, batch, rc.num_heads, rc.head_dim, rc.head_dim), jnp.float32),
+                )
+            )
+    return tuple(caches)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, cur_len):
+    """token (B, 1) int32 or embedding (B, 1, D); cur_len () int32.
+    Returns (logits (B, 1, vocab), new_cache)."""
+    cdt = cfg.cdtype()
+    if jnp.issubdtype(token.dtype, jnp.integer):
+        x = layers.embed_apply(params["embed"], token, cdt)
+    else:
+        x = token.astype(cdt)
+
+    def unit_step(x, scanned):
+        x = layers.constrain(x, "act_dec")
+        unit_params, unit_cache = scanned
+        new_cache = []
+        for pos, kind in enumerate(cfg.block_pattern):
+            p, c = unit_params[pos], unit_cache[pos]
+            h = _norm_apply(cfg, p["ln1"], x)
+            if kind == "attn":
+                h, nk, nv = attention.attn_decode(p["mixer"], cfg.attn_cfg, h, c[0], c[1], cur_len)
+                nc = (nk, nv)
+            elif kind == "mamba":
+                h, buf, hs = ssm.mamba_decode(p["mixer"], cfg.mamba_cfg, h, c[0], c[1])
+                nc = (buf, hs)
+            else:
+                h, xp, st = ssm.rwkv6_decode(p["mixer"], cfg.rwkv_cfg, h, c[0], c[2])
+                nc = (xp, c[1], st)
+            x = x + h
+            h2 = _norm_apply(cfg, p["ln2"], x)
+            if kind == "rwkv":
+                out = ssm.rwkv6_ffn(p["ffn"], h2, nc[1])
+                nc = (nc[0], h2, nc[2])
+            elif cfg.is_moe_layer(pos):
+                out = moe.moe_apply(p["ffn"], cfg.moe, h2)
+            else:
+                out = layers.mlp_apply(p["ffn"], h2, cfg.act)
+            x = x + out
+            new_cache.append(nc)
+        return x, tuple(new_cache)
+
+    x, new_cache = jax.lax.scan(unit_step, x, (params["blocks"], cache), unroll=cfg.scan_unroll)
+    x = _norm_apply(cfg, params["final_norm"], x)
+    return layers.unembed_apply(params["embed"], x, cfg.tie_embeddings), new_cache

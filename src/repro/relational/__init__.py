@@ -1,0 +1,5 @@
+from repro.relational.relation import Relation
+from repro.relational.schema import Atom, Query
+from repro.relational import npkit, oracle
+
+__all__ = ["Relation", "Atom", "Query", "npkit", "oracle"]

@@ -1,0 +1,131 @@
+"""Vectorized open-addressing hash tables over numpy arrays.
+
+This is the host-side twin of the Pallas `hash_probe` kernel: same layout
+(power-of-two capacity, linear probing, -1 = empty slot), fully vectorized —
+both build and probe operate on whole key batches, never one key at a time.
+Composite keys are kept as column tuples and compared column-wise (no lossy
+mixing), while a 64-bit mix is used only to pick the starting slot.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_FNV = np.int64(-3750763034362895579)  # 0xCBF29CE484222325 as signed
+_K1 = np.int64(-7046029254386353131)  # 0x9E3779B97F4A7C15
+_K2 = np.int64(-4417276706812531889)  # 0xBF58476D1CE4E5B9
+
+
+def mix64(cols: list[np.ndarray]) -> np.ndarray:
+    """Column-wise 64-bit mix (splitmix-style), vectorized over rows."""
+    with np.errstate(over="ignore"):
+        h = np.full(len(cols[0]) if cols else 0, _FNV, dtype=np.int64)
+        for c in cols:
+            h = (h ^ (c.astype(np.int64) * _K1)) * _K2
+            h ^= h >> np.int64(29)
+    return h
+
+
+def _capacity(n: int) -> int:
+    return max(8, 1 << int(np.ceil(np.log2(max(1, 2 * n)))))
+
+
+class HashTable:
+    """Maps composite integer keys -> their row index in the key arrays.
+
+    build() expects *unique* keys (the trie build dedups first).
+    probe() returns the key-row index per query, -1 on miss.
+    """
+
+    def __init__(self, key_cols: list[np.ndarray]):
+        self.key_cols = [np.ascontiguousarray(c, dtype=np.int64) for c in key_cols]
+        n = len(self.key_cols[0]) if self.key_cols else 0
+        self.n = n
+        self.cap = _capacity(n)
+        self.mask = self.cap - 1
+        self.slots = np.full(self.cap, -1, dtype=np.int64)
+        self._build()
+
+    def _build(self):
+        n = self.n
+        if n == 0:
+            return
+        slot = (mix64(self.key_cols) & self.mask).astype(np.int64)
+        pending = np.arange(n, dtype=np.int64)
+        slots = self.slots
+        while pending.size:
+            s = slot[pending]
+            free = slots[s] == -1
+            att, satt = pending[free], s[free]
+            slots[satt] = att  # duplicate target slots: last write wins
+            won = slots[satt] == att
+            still = np.concatenate([att[~won], pending[~free]])
+            slot[still] = (slot[still] + 1) & self.mask
+            pending = still
+
+    def probe(self, query_cols: list[np.ndarray]) -> np.ndarray:
+        q = len(query_cols[0]) if query_cols else 0
+        out = np.full(q, -1, dtype=np.int64)
+        if q == 0 or self.n == 0:
+            return out
+        qcols = [np.asarray(c, dtype=np.int64) for c in query_cols]
+        slot = (mix64(qcols) & self.mask).astype(np.int64)
+        pending = np.arange(q, dtype=np.int64)
+        while pending.size:
+            s = slot[pending]
+            occ = self.slots[s]
+            filled = occ != -1
+            match = filled.copy()
+            if match.any():
+                occ_safe = np.where(filled, occ, 0)
+                for kc, qc in zip(self.key_cols, qcols):
+                    match &= kc[occ_safe] == qc[pending]
+            out[pending[match]] = occ[match]
+            cont = filled & ~match
+            pending = pending[cont]
+            slot[pending] = (slot[pending] + 1) & self.mask
+        return out
+
+
+def group_by(key_cols: list[np.ndarray]):
+    """Vectorized group-by over composite keys.
+
+    Returns (unique_key_cols, group_of_row, order, offsets) where `order`
+    permutes rows so each group is contiguous and `offsets` is the CSR
+    boundary array (len = n_groups + 1). Groups are in lexicographic order.
+    """
+    n = len(key_cols[0]) if key_cols else 0
+    if n == 0:
+        return [c[:0] for c in key_cols], np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(1, np.int64)
+    order = np.lexsort(tuple(reversed([np.asarray(c) for c in key_cols])))
+    sorted_cols = [np.asarray(c)[order] for c in key_cols]
+    neq = np.zeros(n, dtype=bool)
+    for c in sorted_cols:
+        neq[1:] |= c[1:] != c[:-1]
+    neq[0] = True
+    starts = np.flatnonzero(neq)
+    uniq = [c[starts] for c in sorted_cols]
+    gid_sorted = np.cumsum(neq) - 1
+    group_of_row = np.empty(n, dtype=np.int64)
+    group_of_row[order] = gid_sorted
+    offsets = np.concatenate([starts, [n]]).astype(np.int64)
+    return uniq, group_of_row, order.astype(np.int64), offsets
+
+
+def csr_expand(offsets: np.ndarray, groups: np.ndarray):
+    """Expand each requested group into its member positions.
+
+    Given CSR `offsets` and an array of group ids (one per frontier row),
+    returns (row_index, member_position) pairs: `row_index[i]` is the frontier
+    row and `member_position[i]` indexes into the CSR value array. Fully
+    vectorized (np.repeat + cumsum trick).
+    """
+    if len(groups) == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    counts = offsets[groups + 1] - offsets[groups]
+    total = int(counts.sum())
+    row_index = np.repeat(np.arange(len(groups), dtype=np.int64), counts)
+    # position within each run:
+    run_starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    within = np.arange(total, dtype=np.int64) - np.repeat(run_starts, counts)
+    member = np.repeat(offsets[groups], counts) + within
+    return row_index, member

@@ -1,0 +1,4 @@
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged_kv import PagedAllocator
+
+__all__ = ["Request", "ServeEngine", "PagedAllocator"]

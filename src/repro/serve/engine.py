@@ -1,0 +1,106 @@
+"""Continuous-batching serve engine.
+
+Fixed-width decode slots (static shapes for jit) + host control plane:
+admit requests into free slots (prefill writes their KV), decode all active
+slots in one batched decode_step with per-slot cur_len, retire finished
+sequences and refill. This is the standard TPU serving shape discipline —
+the batch never changes shape, only the slot occupancy mask does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import ModelConfig, apply_model, decode_step, init_cache
+from repro.serve.paged_kv import PagedAllocator
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, slots: int, max_len: int, greedy: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, slots, max_len)
+        self.cur_len = np.zeros(slots, np.int32)
+        self.active: list[Request | None] = [None] * slots
+        self.queue: deque[Request] = deque()
+        self.pages = PagedAllocator(num_pages=slots * (max_len // 16 + 1), page_size=16)
+        self._decode = jax.jit(
+            lambda p, tok, cache, cur: decode_step(p, cfg, tok, cache, cur)
+        )
+        self._next_tok = np.zeros((slots, 1), np.int32)
+        self.greedy = greedy
+        self.steps = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[s] = req
+                self.pages.alloc(req.rid, len(req.prompt))
+                self._prefill(s, req)
+
+    def _prefill(self, slot: int, req: Request) -> None:
+        """Prefill by teacher-forcing the prompt through decode steps for
+        the single slot (simple and exact; a production path would use the
+        full-sequence forward + cache scatter)."""
+        for t, tok in enumerate(req.prompt):
+            self._next_tok[slot, 0] = tok
+            cur = jnp.asarray(self.cur_len)
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(self._next_tok), self.cache, cur
+            )
+            self.cur_len[slot] += 1
+        nxt = int(jnp.argmax(logits[slot, -1]))
+        self._next_tok[slot, 0] = nxt
+        req.out.append(nxt)
+
+    def step(self) -> int:
+        """One engine iteration: admit + one batched decode. Returns the
+        number of active sequences."""
+        self._admit()
+        if not any(self.active):
+            return 0
+        cur = jnp.asarray(self.cur_len)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self._next_tok), self.cache, cur
+        )
+        toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        self.steps += 1
+        n_active = 0
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.cur_len[s] += 1
+            self.pages.alloc(req.rid, int(self.cur_len[s]) + 1)
+            req.out.append(int(toks[s]))
+            self._next_tok[s, 0] = toks[s]
+            if len(req.out) >= req.max_new or self.cur_len[s] >= self.max_len - 1:
+                req.done = True
+                self.pages.release(req.rid)
+                self.active[s] = None
+                self.cur_len[s] = 0
+            else:
+                n_active += 1
+        return n_active + len(self.queue)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        while (self.queue or any(self.active)) and self.steps < max_steps:
+            self.step()

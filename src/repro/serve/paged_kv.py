@@ -1,0 +1,66 @@
+"""Paged KV-cache allocator.
+
+The page table is a relation (seq_id, page_no) -> physical slot, and the
+lookup is exactly the join engine's batched hash probe (DESIGN.md Sec 5.3):
+we reuse the vectorized open-addressing table from relational/npkit (the
+host twin of the Pallas hash_probe kernel). Allocation/free happens on the
+host control plane; the device side sees only dense page-index arrays.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.relational.npkit import HashTable
+
+
+class PagedAllocator:
+    def __init__(self, num_pages: int, page_size: int):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.free = list(range(num_pages - 1, -1, -1))
+        self.owner: dict[int, list[int]] = {}  # seq_id -> [slots in page order]
+        self._table: HashTable | None = None
+        self._dirty = True
+
+    def alloc(self, seq_id: int, num_tokens: int) -> list[int]:
+        """Ensure seq has pages for `num_tokens`; returns new slots."""
+        pages = self.owner.setdefault(seq_id, [])
+        need = -(-num_tokens // self.page_size) - len(pages)
+        if need > len(self.free):
+            raise MemoryError(f"paged KV pool exhausted ({need} > {len(self.free)})")
+        new = [self.free.pop() for _ in range(max(0, need))]
+        pages.extend(new)
+        self._dirty = bool(new)
+        return new
+
+    def release(self, seq_id: int) -> None:
+        self.free.extend(self.owner.pop(seq_id, []))
+        self._dirty = True
+
+    def _rebuild(self) -> None:
+        seqs, pnos, slots = [], [], []
+        for sid, pages in self.owner.items():
+            for i, slot in enumerate(pages):
+                seqs.append(sid)
+                pnos.append(i)
+                slots.append(slot)
+        self._keys = [np.asarray(seqs, np.int64), np.asarray(pnos, np.int64)]
+        self._vals = np.asarray(slots, np.int64)
+        self._table = HashTable(self._keys)
+        self._dirty = False
+
+    def lookup(self, seq_ids: np.ndarray, page_nos: np.ndarray) -> np.ndarray:
+        """Batched page-table probe: physical slot per (seq, page), -1 miss."""
+        if self._dirty or self._table is None:
+            self._rebuild()
+        idx = self._table.probe([np.asarray(seq_ids, np.int64), np.asarray(page_nos, np.int64)])
+        out = np.where(idx >= 0, self._vals[np.clip(idx, 0, None)], -1)
+        return out
+
+    def page_index(self, seq_ids: list[int], max_pages: int) -> np.ndarray:
+        """Dense (B, max_pages) slot matrix for the device (-1 = unused)."""
+        out = np.full((len(seq_ids), max_pages), -1, dtype=np.int32)
+        for i, sid in enumerate(seq_ids):
+            pages = self.owner.get(sid, [])[:max_pages]
+            out[i, : len(pages)] = pages
+        return out

@@ -1,0 +1,9 @@
+from repro.train.optimizer import AdamWConfig, init_state, apply_updates, schedule
+from repro.train.trainer import TrainConfig, make_train_step, init_train_state, xent_loss
+from repro.train import checkpoint, compression, data, straggler
+
+__all__ = [
+    "AdamWConfig", "init_state", "apply_updates", "schedule",
+    "TrainConfig", "make_train_step", "init_train_state", "xent_loss",
+    "checkpoint", "compression", "data", "straggler",
+]

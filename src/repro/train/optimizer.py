@@ -1,0 +1,85 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, and a
+configurable moment dtype (bf16 moments for the >=398B archs so optimizer
+state fits HBM — see DESIGN.md Sec 6). Pure pytree-in/pytree-out; no optax
+dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(cfg: AdamWConfig, params: Any):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    dt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+        return newp, mf.astype(dt), vf.astype(dt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,75 @@
+"""Train step: xent loss, microbatch gradient accumulation (lax.scan with
+donated carry), mixed precision, AdamW — the function launch/dryrun.py
+lowers on the production mesh and examples/train_lm.py runs on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, apply_model
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = dataclasses.field(default_factory=opt.AdamWConfig)
+    microbatches: int = 1  # split the global batch, accumulate grads
+
+
+def xent_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32. labels -100 are masked."""
+    mask = labels >= 0
+    labels_safe = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def loss_fn(params, cfg: ModelConfig, inputs, labels):
+    logits = apply_model(params, cfg, inputs)
+    return xent_loss(logits, labels)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). batch = {"inputs": (B, S[, D]), "labels": (B, S)}."""
+
+    def train_step(params, opt_state, batch):
+        mb = tcfg.microbatches
+        if mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch["inputs"], batch["labels"])
+        else:
+            b = batch["inputs"].shape[0]
+            assert b % mb == 0
+            resh = lambda x: x.reshape(mb, b // mb, *x.shape[1:])  # noqa: E731
+            micro = jax.tree.map(resh, batch)
+
+            def acc_step(carry, mb_batch):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(
+                    params, cfg, mb_batch["inputs"], mb_batch["labels"]
+                )
+                grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.float32(0), zero), micro)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        params, opt_state, metrics = opt.apply_updates(tcfg.adamw, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig):
+    from repro.models.transformer import init_params
+
+    params = init_params(key, cfg)
+    opt_state = opt.init_state(tcfg.adamw, params)
+    return params, opt_state

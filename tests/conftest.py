@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+from repro.relational.relation import Relation
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def rand_rel(rng, name, vars_, n, dom):
+    return Relation(name, {v: rng.integers(0, dom, n) for v in vars_})

@@ -1,0 +1,53 @@
+"""Deliverable (e) integrity: every (arch x shape x mesh) dry-run record
+exists and is ok (or a documented long_500k structural skip)."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch
+
+DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "benchmarks", "results", "dryrun")
+
+
+@pytest.mark.skipif(not os.path.isdir(DIR), reason="dry-run not yet executed")
+@pytest.mark.parametrize("pod", ["pod1", "pod2"])
+def test_all_cells_recorded_and_green(pod):
+    for arch in ARCHS:
+        spec = get_arch(arch)
+        for shape in SHAPES:
+            path = os.path.join(DIR, f"{arch}_{shape}_{pod}.json")
+            assert os.path.exists(path), f"missing dry-run record {path}"
+            rec = json.load(open(path))
+            if spec.shape_supported(shape):
+                assert rec["status"] == "ok", (arch, shape, pod, rec.get("error"))
+                assert rec.get("flops") or rec["raw"]["flops"]
+            else:
+                assert rec["status"] == "skipped"
+
+
+OPT_DIR = DIR + "_opt"
+
+
+@pytest.mark.skipif(not os.path.isdir(DIR), reason="dry-run not yet executed")
+def test_memory_fits_hbm_at_production_config():
+    """Train cells at the mb=8 production config must fit 16 GB/chip for
+    the <100B archs. The >=140B MoE archs keep optimizer state sharded
+    under HBM (args < 16 GB) but need deeper grad accumulation or the
+    512-chip mesh for activation fit at 256 chips — recorded in
+    EXPERIMENTS.md §Dry-run, asserted as state-fits here."""
+    hbm = 16e9
+    use = OPT_DIR if os.path.isdir(OPT_DIR) else DIR
+    for f in glob.glob(os.path.join(use, "*train_4k_pod1.json")):
+        rec = json.load(open(f))
+        if rec["status"] != "ok":
+            continue
+        mem = rec.get("memory_mb8") or rec["memory"]
+        args = rec["memory"].get("argument_size_in_bytes") or 0
+        temps = mem.get("temp_size_in_bytes") or 0
+        if rec["params_total"] < 100e9:
+            assert args + temps < hbm, (rec["arch"], args / 1e9, temps / 1e9)
+        else:
+            assert args < hbm, (rec["arch"], args / 1e9)

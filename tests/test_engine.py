@@ -1,0 +1,133 @@
+"""Engine correctness vs the brute-force oracle: all three algorithms,
+bag semantics, bushy plans, edge cases, count aggregation."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BinaryPlan,
+    binary2fj,
+    binary_join,
+    factor,
+    free_join,
+    generic_join,
+    linear,
+    optimize,
+    to_sorted_tuples,
+)
+from repro.core.tuple_engine import execute_tuples
+from repro.relational.oracle import join_oracle
+from repro.relational.relation import Relation
+from repro.relational.schema import Atom, Query, clover_query, triangle_query
+from tests.conftest import rand_rel
+
+ENGINES = [free_join, binary_join, generic_join]
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("engine", ENGINES)
+def test_triangle_matches_oracle(engine, seed):
+    rng = np.random.default_rng(seed)
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 60, 10) for a in q.atoms}
+    want = join_oracle(q, rels)
+    got = to_sorted_tuples(engine(q, rels), q.head)
+    assert got == want
+    assert engine(q, rels, agg="count") == len(want)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_clover_skewed_instance(engine):
+    # the paper's Fig. 3 adversarial instance
+    n = 30
+    ar = np.arange(n, dtype=np.int64)
+    rels = {
+        "R": Relation("R", {"x": np.r_[0, np.full(n, 1), np.full(n, 2)], "a": np.r_[0, ar, ar + n]}),
+        "S": Relation("S", {"x": np.r_[0, np.full(n, 2), np.full(n, 3)], "b": np.r_[0, ar, ar + n]}),
+        "T": Relation("T", {"x": np.r_[0, np.full(n, 3), np.full(n, 1)], "c": np.r_[0, ar, ar + n]}),
+    }
+    q = clover_query()
+    got = to_sorted_tuples(engine(q, rels), q.head)
+    assert got == [(0, 0, 0, 0)]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_bag_semantics_duplicates(engine):
+    rels = {
+        "R": Relation("R", {"x": np.array([1, 1, 1]), "a": np.array([5, 5, 7])}),
+        "S": Relation("S", {"x": np.array([1, 1]), "b": np.array([9, 9])}),
+    }
+    q = Query([Atom("R", ("x", "a")), Atom("S", ("x", "b"))])
+    want = join_oracle(q, rels)
+    assert len(want) == 6
+    assert to_sorted_tuples(engine(q, rels), q.head) == want
+
+
+def test_bushy_plan_materialization(rng):
+    q = Query([Atom("R", ("x", "y")), Atom("S", ("y", "z")), Atom("T", ("z", "u")), Atom("U", ("u", "w"))])
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 80, 8) for a in q.atoms}
+    tree = BinaryPlan(BinaryPlan(q.atoms[0], q.atoms[1]), BinaryPlan(q.atoms[2], q.atoms[3]))
+    want = join_oracle(q, rels)
+    for engine in (free_join, binary_join):
+        assert to_sorted_tuples(engine(q, rels, tree), q.head) == want
+
+
+def test_cross_product():
+    rels = {"R": Relation("R", {"x": np.arange(4)}), "S": Relation("S", {"y": np.arange(3)})}
+    q = Query([Atom("R", ("x",)), Atom("S", ("y",))])
+    got = to_sorted_tuples(free_join(q, rels, linear(q.atoms)), q.head)
+    assert got == join_oracle(q, rels)
+
+
+def test_empty_relation():
+    rels = {
+        "R": Relation("R", {"x": np.arange(5), "y": np.arange(5)}),
+        "S": Relation("S", {"y": np.array([], np.int64), "z": np.array([], np.int64)}),
+    }
+    q = Query([Atom("R", ("x", "y")), Atom("S", ("y", "z"))])
+    for engine in ENGINES:
+        assert to_sorted_tuples(engine(q, rels), q.head) == []
+
+
+def test_self_join_aliases(rng):
+    E = rand_rel(rng, "E", ("x", "y"), 50, 8)
+    q = Query([Atom("E", ("x", "y"), "E1"), Atom("E", ("y", "z"), "E2")])
+    rels = {"E1": E, "E2": E.rename({"x": "y", "y": "z"})}
+    want = join_oracle(q, rels)
+    for engine in ENGINES:
+        assert to_sorted_tuples(engine(q, rels), q.head) == want
+
+
+def test_tuple_engine_matches_full_batch(rng):
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 40, 8) for a in q.atoms}
+    fj = factor(binary2fj(q.atoms, q))
+    want = join_oracle(q, rels)
+    for bs in (1, 10, 1000):
+        assert sorted(execute_tuples(fj, rels, batch_size=bs)) == want
+
+
+@pytest.mark.parametrize("mode", ["colt", "slt", "simple"])
+def test_trie_modes_agree(rng, mode):
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 60, 9) for a in q.atoms}
+    want = join_oracle(q, rels)
+    got = to_sorted_tuples(free_join(q, rels, mode=mode), q.head)
+    assert got == want
+
+
+def test_optimizer_good_and_bad_same_result(rng):
+    q = Query([Atom("A", ("x", "y")), Atom("B", ("y", "z")), Atom("C", ("z", "w")), Atom("D", ("w", "x"))])
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 50, 6) for a in q.atoms}
+    want = join_oracle(q, rels)
+    for bad in (False, True):
+        tree = optimize(q, rels, bad=bad)
+        for engine in (free_join, binary_join):
+            assert to_sorted_tuples(engine(q, rels, tree), q.head) == want
+
+
+def test_factorized_count_equals_materialized(rng):
+    q = clover_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 100, 5) for a in q.atoms}
+    c = free_join(q, rels, agg="count")
+    bound, mult = free_join(q, rels)
+    assert c == int(mult.sum()) == len(join_oracle(q, rels))

@@ -1,0 +1,65 @@
+"""Per-kernel shape/dtype sweeps, Pallas (interpret) vs pure-jnp oracles."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,k,q", [(1, 1, 5), (17, 2, 64), (300, 3, 700), (1000, 1, 2048)])
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_hash_probe_vs_oracle(n, k, q, impl, rng):
+    keys = np.unique(rng.integers(0, 10**6, (2 * n, k)).astype(np.int32), axis=0)[:n]
+    table = ops.build_table(jnp.asarray(keys))
+    assert int(table.max_disp) < 32
+    qs = np.vstack(
+        [keys[rng.integers(0, len(keys), q // 2)],
+         rng.integers(10**6, 2 * 10**6, (q - q // 2, k)).astype(np.int32)]
+    )
+    want = ref.hash_probe_ref(jnp.asarray(keys), jnp.asarray(qs))
+    got = ops.probe(table, jnp.asarray(qs), impl=impl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (100, 37), (1000, 999)])
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_intersect_vs_oracle(m, n, impl, rng):
+    b = np.unique(rng.integers(0, 10**5, n).astype(np.int32))
+    a = np.concatenate(
+        [b[rng.integers(0, len(b), m // 2 + 1)], rng.integers(10**5, 2 * 10**5, m // 2).astype(np.int32)]
+    )
+    wm, wp = ref.intersect_ref(jnp.asarray(a), jnp.asarray(b))
+    gm, gp = ops.intersect_sorted(jnp.asarray(a), jnp.asarray(b), impl=impl)
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+    np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+
+
+@pytest.mark.parametrize("g,f,cap", [(5, 8, 1024), (50, 100, 2048)])
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_csr_expand_vs_oracle(g, f, cap, impl, rng):
+    counts = rng.integers(0, 7, g).astype(np.int32)
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    groups = rng.integers(0, g, f).astype(np.int32)
+    wfr, wm, wv, wt = ref.csr_expand_ref(jnp.asarray(offsets), jnp.asarray(groups), cap)
+    gfr, gm, gv, gt = ops.csr_expand_capped(jnp.asarray(offsets), jnp.asarray(groups), cap, impl=impl)
+    np.testing.assert_array_equal(np.asarray(gfr), np.asarray(wfr))
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+    assert int(gt) == int(wt)
+
+
+def test_expand_counted_zero_counts():
+    base = jnp.asarray(np.array([0, 5, 9], np.int32))
+    counts = jnp.asarray(np.array([2, 0, 3], np.int32))
+    fr, member, valid, total = ops.expand_counted(base, counts, 8)
+    assert int(total) == 5
+    np.testing.assert_array_equal(np.asarray(fr[:5]), [0, 0, 2, 2, 2])
+    np.testing.assert_array_equal(np.asarray(member[:5]), [0, 1, 9, 10, 11])
+
+
+def test_build_table_adversarial_same_slot(rng):
+    # many keys whose mixed hash collides in low bits is handled by probing
+    keys = (np.arange(512, dtype=np.int32) * 64)[:, None]
+    t = ops.build_table(jnp.asarray(keys))
+    got = ops.probe(t, jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(got), np.arange(512))

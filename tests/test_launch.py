@@ -1,0 +1,99 @@
+"""Launch-layer units that don't need 512 devices: sharding rules,
+collective parsers, roofline math, arch/shape eligibility."""
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import collective_bytes, collective_bytes_scaled
+
+HLO = """
+HloModule test
+%region_2.345 (arg: (s32[], bf16[8,128])) -> (s32[], bf16[8,128]) {
+  %ag = bf16[8,128]{1,0} all-gather(%x), dimensions={0}
+  ROOT %t = tuple(...)
+}
+ENTRY %main () -> f32[] {
+  %w = (s32[], bf16[8,128]) while(%init), condition=%cond, body=%region_2.345
+  %ar = f32[64]{0} all-reduce(%y)
+  ROOT %r = f32[] constant(0)
+}
+"""
+
+
+def test_collective_bytes_counts_results():
+    got = collective_bytes(HLO)
+    assert got["all-gather"] == 8 * 128 * 2
+    assert got["all-reduce"] == 64 * 4
+
+
+def test_collective_bytes_scaled_multiplies_while_bodies():
+    got = collective_bytes_scaled(HLO, repeats=10)
+    assert got["all-gather"] == 8 * 128 * 2 * 10  # inside the while body
+    assert got["all-reduce"] == 64 * 4  # top level: counted once
+
+
+def test_param_spec_rules():
+    jax = pytest.importorskip("jax")
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    # build a fake 16x16 mesh object via mock shapes: use Mesh of 1 device
+    # but validate the *rule logic* through a stub mesh-like object
+    class StubMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    from repro.launch.sharding import param_spec
+
+    # attention: heads divisible -> heads sharded
+    spec = param_spec("['blocks'][0]['mixer']['wq']", (56, 6144, 48, 128), StubMesh())
+    assert spec == jax.sharding.PartitionSpec(None, "data", "model", None)
+    # heads NOT divisible -> replicate over model (never head_dim)
+    spec = param_spec("['blocks'][0]['mixer']['wk']", (56, 6144, 8, 128), StubMesh())
+    assert spec == jax.sharding.PartitionSpec(None, "data", None, None)
+    # MoE: E divisible -> expert parallel
+    spec = param_spec("['blocks'][0]['ffn']['wi']", (35, 128, 7168, 4864), StubMesh())
+    assert spec[1] == "model"
+    # MoE: E not divisible -> ffn-dim TP + FSDP on the other dim
+    spec = param_spec("['blocks'][0]['ffn']['wi']", (56, 8, 6144, 16384), StubMesh())
+    assert spec == jax.sharding.PartitionSpec(None, None, "data", "model")
+    # embeddings vocab-parallel
+    spec = param_spec("['embed']['table']", (151936, 1536), StubMesh())
+    assert spec == jax.sharding.PartitionSpec("model", "data")
+    # 1D norm scales: generic rule shards the (divisible) dim over model
+    spec = param_spec("['final_norm']['scale']", (1536,), StubMesh())
+    assert spec == jax.sharding.PartitionSpec("model")
+
+
+def test_batch_and_cache_specs():
+    import jax
+
+    class StubMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    from repro.launch.sharding import batch_spec, cache_spec
+
+    assert batch_spec((256, 4096), StubMesh()) == jax.sharding.PartitionSpec("data", None)
+    # batch=1 long context: shard the sequence dim instead
+    s = batch_spec((1, 524288), StubMesh())
+    assert s == jax.sharding.PartitionSpec(None, "data")
+    # cache (R, B, T, G, hd): batch over data, a divisible tail dim over model
+    s = cache_spec((28, 128, 32768, 2, 128), StubMesh())
+    assert s[1] == "data" and "model" in s
+
+
+def test_model_flops_moe_active_params():
+    from repro.launch.roofline import model_flops
+
+    dense = model_flops("qwen2-1.5b", "train_4k")
+    # 6 * N * D within 5%
+    assert abs(dense / (6 * 1.54e9 * 256 * 4096) - 1) < 0.05
+    moe_total = model_flops("mixtral-8x22b", "train_4k")
+    # active ~39B of 140B params
+    assert 6 * 30e9 * 1.05e6 < moe_total < 6 * 50e9 * 1.05e6
+
+
+def test_long_context_eligibility_matches_design():
+    from repro.configs import ARCHS, get_arch
+
+    eligible = {a for a in ARCHS if get_arch(a).shape_supported("long_500k")}
+    assert eligible == {"rwkv6-1.6b", "jamba-1.5-large-398b", "mixtral-8x22b"}

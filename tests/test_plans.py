@@ -1,0 +1,81 @@
+"""Plan-layer unit tests: binary2fj, factor, validity (paper Figs 9-10)."""
+import pytest
+
+from repro.core.plan import (
+    BinaryPlan,
+    FreeJoinPlan,
+    Subatom,
+    binary2fj,
+    factor,
+    gj_plan,
+    linear,
+    var_order_from_fj,
+)
+from repro.relational.schema import Atom, Query, clover_query, triangle_query
+
+
+def test_binary2fj_clover_matches_paper_eq2():
+    q = clover_query()
+    fj = binary2fj(q.atoms, q)
+    assert str(fj) == "[[R(x,a), S(x)], [S(b), T(x)], [T(c)]]"
+
+
+def test_factor_clover_matches_paper_optimized_plan():
+    q = clover_query()
+    fj = factor(binary2fj(q.atoms, q))
+    assert str(fj) == "[[R(x,a), S(x), T(x)], [S(b)], [T(c)]]"
+
+
+def test_binary2fj_chain_matches_paper_example_4_1():
+    q = Query([Atom("R", ("x", "y")), Atom("S", ("y", "z")), Atom("T", ("z", "u")), Atom("W", ("u", "v"))])
+    fj = binary2fj(q.atoms, q)
+    assert str(fj) == "[[R(x,y), S(y)], [S(z), T(z)], [T(u), W(u)], [W(v)]]"
+
+
+def test_gj_plan_is_all_covers():
+    q = clover_query()
+    plan = gj_plan(q, ["x", "a", "b", "c"])
+    assert str(plan) == "[[R(x), S(x), T(x)], [R(a)], [S(b)], [T(c)]]"
+    plan.validate()
+
+
+def test_invalid_plan_example_3_9_rejected():
+    q = clover_query()
+    plan = FreeJoinPlan(q, [[Subatom("R", ("x", "a")), Subatom("S", ("x", "b")), Subatom("T", ("x", "c"))]])
+    # single node containing everything: S(x,b) needs b which is not fresh-covered
+    # by any single subatom... actually R(x,a) doesn't contain b,c -> no cover
+    assert not plan.is_valid()
+
+
+def test_partitioning_violation_rejected():
+    q = clover_query()
+    plan = FreeJoinPlan(q, [[Subatom("R", ("x",))], [Subatom("S", ("x", "b"))], [Subatom("T", ("x", "c"))]])
+    assert not plan.is_valid()  # R(a) missing
+
+
+def test_factored_plan_always_valid_random_chains(rng):
+    import itertools
+
+    vars_ = ["a", "b", "c", "d", "e", "f"]
+    for m in (3, 4, 5):
+        atoms = [Atom(f"R{i}", (vars_[i], vars_[i + 1])) for i in range(m)]
+        q = Query(atoms)
+        for perm in itertools.islice(itertools.permutations(atoms), 8):
+            fj = factor(binary2fj(list(perm), q))
+            fj.validate()
+
+
+def test_bushy_decompose():
+    q = Query([Atom("R", ("x", "y")), Atom("S", ("y", "z")), Atom("T", ("z", "u")), Atom("U", ("u", "w"))])
+    tree = BinaryPlan(BinaryPlan(q.atoms[0], q.atoms[1]), BinaryPlan(q.atoms[2], q.atoms[3]))
+    stages = tree.decompose()
+    assert len(stages) == 2
+    assert stages[-1][0] == "__root"
+    assert isinstance(stages[0][1][0], Atom)
+
+
+def test_var_order_extension():
+    q = triangle_query()
+    fj = factor(binary2fj(q.atoms, q))
+    order = var_order_from_fj(fj)
+    assert sorted(order) == sorted(q.variables)

@@ -1,0 +1,113 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import binary_join, free_join, generic_join, to_sorted_tuples
+from repro.core.plan import binary2fj, factor
+from repro.relational.npkit import HashTable, group_by
+from repro.relational.oracle import join_oracle
+from repro.relational.relation import Relation
+from repro.relational.schema import Atom, Query
+
+VARS = ["u", "v", "w", "x", "y"]
+
+
+@st.composite
+def random_query(draw):
+    """2-4 atoms over a small shared var pool, connected-ish."""
+    m = draw(st.integers(2, 4))
+    atoms = []
+    used: list[str] = []
+    for i in range(m):
+        pool = used if used and draw(st.booleans()) else VARS
+        k = draw(st.integers(1, min(3, len(pool))))
+        vs = draw(
+            st.lists(st.sampled_from(pool), min_size=k, max_size=k, unique=True)
+        )
+        # make sure atoms overlap so the query is connected
+        if used and not (set(vs) & set(used)):
+            vs[0] = used[0]
+        atoms.append(Atom(f"R{i}", tuple(dict.fromkeys(vs))))
+        used.extend(v for v in vs if v not in used)
+    return Query(atoms)
+
+
+@st.composite
+def instance(draw, q):
+    rels = {}
+    for a in q.atoms:
+        n = draw(st.integers(0, 25))
+        cols = {
+            v: np.array(draw(st.lists(st.integers(0, 5), min_size=n, max_size=n)), np.int64)
+            for v in a.vars
+        }
+        rels[a.alias] = Relation(a.alias, cols)
+    return rels
+
+
+@given(data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_all_engines_match_oracle(data):
+    q = data.draw(random_query())
+    rels = data.draw(instance(q))
+    want = join_oracle(q, rels)
+    for engine in (free_join, binary_join, generic_join):
+        got = to_sorted_tuples(engine(q, rels), q.head)
+        assert got == want
+        assert engine(q, rels, agg="count") == len(want)
+
+
+@given(data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_factor_preserves_validity_and_semantics(data):
+    q = data.draw(random_query())
+    rels = data.draw(instance(q))
+    fj = binary2fj(q.atoms, q)
+    ff = factor(fj)
+    ff.validate()
+    from repro.core import engine
+
+    a = engine.execute(fj, rels)
+    b = engine.execute(ff, rels)
+    from repro.core.api import to_sorted_tuples as ts
+
+    assert ts(a, q.head) == ts(b, q.head)
+
+
+@given(
+    keys=st.lists(st.tuples(st.integers(-2**31, 2**31 - 1), st.integers(-2**31, 2**31 - 1)),
+                  min_size=0, max_size=200, unique=True),
+    queries=st.lists(st.tuples(st.integers(-2**31, 2**31 - 1), st.integers(-2**31, 2**31 - 1)),
+                     min_size=0, max_size=100),
+)
+@settings(max_examples=50, deadline=None)
+def test_hashtable_probe_total(keys, queries):
+    cols = [np.array([k[i] for k in keys], np.int64) for i in range(2)] if keys else [np.zeros(0, np.int64)] * 2
+    t = HashTable(cols)
+    qcols = [np.array([k[i] for k in queries], np.int64) for i in range(2)] if queries else [np.zeros(0, np.int64)] * 2
+    res = t.probe(qcols)
+    lookup = {k: i for i, k in enumerate(keys)}
+    for j, qk in enumerate(queries):
+        assert res[j] == lookup.get(qk, -1)
+
+
+@given(
+    rows=st.lists(st.tuples(st.integers(0, 6), st.integers(0, 6)), min_size=0, max_size=100)
+)
+@settings(max_examples=50, deadline=None)
+def test_group_by_partitions(rows):
+    cols = [np.array([r[i] for r in rows], np.int64) for i in range(2)] if rows else [np.zeros(0, np.int64)] * 2
+    uniq, gid, order, offsets = group_by(cols)
+    n = len(rows)
+    assert len(order) == n and offsets[-1] == n
+    # every row's group key matches the unique key of its group
+    for i in range(n):
+        g = gid[i]
+        assert (cols[0][i], cols[1][i]) == (uniq[0][g], uniq[1][g])
+    # offsets partition the sorted order into contiguous equal-key runs
+    for g in range(len(uniq[0])):
+        seg = order[offsets[g]:offsets[g + 1]]
+        assert all(gid[s] == g for s in seg)
