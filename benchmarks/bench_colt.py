@@ -30,7 +30,8 @@ def run(scale: float = 0.1, repeats: int = 2):
                 repeats,
                 warmup=0,
             )
-            times[mode] = (t, c, st.build_ns / 1e6)
+            # build_ns accumulates across calls now; report the per-call mean
+            times[mode] = (t, c, st.build_ns / 1e6 / max(1, repeats))
         c0 = times["colt"][1]
         assert all(v[1] == c0 for v in times.values()), name
         speed_slt.append(times["slt"][0] / times["colt"][0])

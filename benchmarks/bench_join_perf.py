@@ -1,9 +1,9 @@
 """§Perf hillclimb cell 3: the compiled Free Join engine itself (the
 paper-representative pair). Wall-clock on CPU (the join engine is the one
-component that genuinely runs here), jit-compiled, excluding compile:
-triangle count over zipf-skewed edges.
+component that genuinely runs here), jit-compiled, excluding compile.
 
-Iterations (hypothesis -> change -> measure, EXPERIMENTS.md §Perf):
+Part 1 — hillclimb iterations on the triangle count over zipf-skewed edges
+(hypothesis -> change -> measure, EXPERIMENTS.md §Perf):
   J0 baseline            capacities 4M, probe budget 32
   J1 probe budget 8      probe loop is 32 unrolled gather+compare rounds;
                          load factor <= 0.5 => clusters are short; 8 rounds
@@ -12,9 +12,19 @@ Iterations (hypothesis -> change -> measure, EXPERIMENTS.md §Perf):
                          estimates (expansion + mask work scales with
                          capacity, not with live rows)
   J3 J1+J2 combined
+
+Part 2 — the planned path vs the eager engine on a low-selectivity star
+query (a selective probe kills most frontier lanes early):
+  eager                  api.free_join (numpy COLT engine)
+  compiled_nocompact     AdaptiveExecutor, planner capacities, no compaction
+  compiled_compact       same + frontier compaction at the planner-chosen
+                         point (mid-node, right after the selective probe)
+The three rows also land in BENCH_join_perf.json (repo root) so the perf
+trajectory of the compiled path is tracked PR-over-PR.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
@@ -22,10 +32,11 @@ import numpy as np
 import jax
 
 from benchmarks.common import timeit
-from repro.core import binary2fj, factor
-from repro.core.compiled import make_count_fn
+from repro.core import binary2fj, factor, free_join
+from repro.core.capacity import plan_capacities
+from repro.core.compiled import AdaptiveExecutor, make_count_fn, relations_to_cols
 from repro.relational.relation import Relation
-from repro.relational.schema import triangle_query
+from repro.relational.schema import Atom, Query, triangle_query
 
 
 def _data(n=200_000, dom=30_000, seed=0):
@@ -38,6 +49,26 @@ def _data(n=200_000, dom=30_000, seed=0):
         rels[a.alias] = Relation(
             a.alias, {a.vars[0]: perm[z], a.vars[1]: rng.integers(0, dom, n)}
         )
+    return q, rels
+
+
+def _lowsel_data(n=600_000, dom=30_000, sel=0.02, seed=0):
+    """Star Q(x,y,a,b) :- R(x,y), S(y,a), T(y,b) where S covers only a
+    `sel` fraction of the y domain. The factored plan probes S then T in
+    one node; the S probe kills ~98% of the frontier, so without compaction
+    the T probe (budget x gather rounds per lane) and both later factorized
+    folds drag every dead lane along — the compaction sweet spot."""
+    rng = np.random.default_rng(seed)
+    q = Query([Atom("R", ("x", "y")), Atom("S", ("y", "a")), Atom("T", ("y", "b"))])
+    ny = max(1, int(dom * sel))
+    y_live = rng.choice(dom, ny, replace=False)
+    rels = {
+        "R": Relation("R", {"x": rng.integers(0, dom, n), "y": rng.integers(0, dom, n)}),
+        "S": Relation("S", {"y": y_live[rng.integers(0, ny, ny)],
+                            "a": rng.integers(0, dom, ny)}),
+        "T": Relation("T", {"y": rng.integers(0, dom, n // 10),
+                            "b": rng.integers(0, dom, n // 10)}),
+    }
     return q, rels
 
 
@@ -56,28 +87,80 @@ def _run(q, rels, caps, budget, repeats=3):
     return t, int(count)
 
 
-def run(repeats: int = 3):
-    q, rels = _data()
+def _run_adaptive(q, rels, repeats, compact_threshold):
+    fj = factor(binary2fj(q.atoms, q))
+    planned = plan_capacities(fj, rels, compact_threshold=compact_threshold)
+    ex = AdaptiveExecutor(fj, planned, agg="count")
+    cols = relations_to_cols(fj, rels)
+    count = int(ex(cols))  # compile (+ any overflow growth) + 1st run
+    t, _ = timeit(lambda: jax.block_until_ready(ex(cols)), repeats=repeats, warmup=1)
+    return t, count, ex, planned
+
+
+def run(repeats: int = 3, smoke: bool = False):
+    q, rels = _data(n=10_000, dom=3_000) if smoke else _data()
+    cap = 1 << 17 if smoke else 1 << 22
+    tight = [1 << 14, 1 << 16, 1 << 16, 1 << 16] if smoke else [1 << 19, 1 << 21, 1 << 21, 1 << 21]
     rows = []
     # J0
-    t0, c0 = _run(q, rels, [1 << 22] * 4, 32, repeats)
+    t0, c0 = _run(q, rels, [cap] * 4, 32, repeats)
     rows.append({"name": "joinperf.J0_baseline", "us": t0 * 1e6, "derived": f"count={c0}"})
     # J1: probe budget 8
-    t1, c1 = _run(q, rels, [1 << 22] * 4, 8, repeats)
+    t1, c1 = _run(q, rels, [cap] * 4, 8, repeats)
     assert c1 == c0
     rows.append({"name": "joinperf.J1_budget8", "us": t1 * 1e6,
                  "derived": f"speedup_vs_J0={t0 / t1:.2f}x"})
     # J2: tight capacities (estimate-sized, x2 safety)
-    caps = [1 << 19, 1 << 21, 1 << 21, 1 << 21]
-    t2, c2 = _run(q, rels, caps, 32, repeats)
+    t2, c2 = _run(q, rels, tight, 32, repeats)
     assert c2 == c0
     rows.append({"name": "joinperf.J2_tight_caps", "us": t2 * 1e6,
                  "derived": f"speedup_vs_J0={t0 / t2:.2f}x"})
     # J3: both
-    t3, c3 = _run(q, rels, caps, 8, repeats)
+    t3, c3 = _run(q, rels, tight, 8, repeats)
     assert c3 == c0
     rows.append({"name": "joinperf.J3_combined", "us": t3 * 1e6,
                  "derived": f"speedup_vs_J0={t0 / t3:.2f}x"})
+    rows.extend(run_compiled_vs_eager(repeats=repeats, smoke=smoke))
+    return rows
+
+
+def run_compiled_vs_eager(repeats: int = 3, smoke: bool = False, path: str = "BENCH_join_perf.json"):
+    """Eager vs planned-compiled (with/without compaction) on the
+    low-selectivity star query; writes the BENCH_join_perf.json perf record
+    (full runs only — smoke numbers don't overwrite the trajectory)."""
+    q, rels = _lowsel_data(n=30_000, dom=3_000) if smoke else _lowsel_data()
+    te, ce = timeit(lambda: free_join(q, rels, agg="count"), repeats=repeats, warmup=1)
+    tn, cn, _, _ = _run_adaptive(q, rels, repeats, compact_threshold=0.0)  # never compact
+    tc, cc, ex, planned = _run_adaptive(q, rels, repeats, compact_threshold=0.25)
+    assert ce == cn == cc, (ce, cn, cc)
+    # check the planner's output: adaptive growth may legitimately disable
+    # an under-targeted compaction at run time
+    assert any(t is not None for t in planned.compact_to), "expected a compaction node"
+    rows = [
+        {"name": "joinperf.eager_lowsel", "us": te * 1e6, "derived": f"count={ce}"},
+        {"name": "joinperf.compiled_nocompact_lowsel", "us": tn * 1e6,
+         "derived": f"speedup_vs_eager={te / tn:.2f}x"},
+        {"name": "joinperf.compiled_compact_lowsel", "us": tc * 1e6,
+         "derived": f"speedup_vs_nocompact={tn / tc:.2f}x;plan={ex.cap_plan}"},
+    ]
+    if smoke:
+        return rows
+    record = {
+        "bench": "join_perf.compiled_vs_eager",
+        "query": "star R(x,y),S(y,a),T(y,b), 2% probe selectivity",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "count": ce,
+        "eager_us": te * 1e6,
+        "compiled_nocompact_us": tn * 1e6,
+        "compiled_compact_us": tc * 1e6,
+        "compact_speedup_vs_nocompact": tn / tc,
+        "capacity_plan": str(ex.cap_plan),
+        "retries": ex.retries,
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
     return rows
 
 

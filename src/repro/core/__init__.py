@@ -1,10 +1,19 @@
 # Free Join (Wang, Willsey, Suciu — SIGMOD 2023): the paper's primary
 # contribution. Plans (binary2fj + factor), COLT tries, the vectorized
-# Free Join engine, baselines, optimizer, and the distributed engine.
-from repro.core.api import binary_join, free_join, generic_join, to_sorted_tuples
+# Free Join engine, baselines, optimizer, the capacity-planned compiled
+# path, and the distributed engine.
+from repro.core.api import (
+    binary_join,
+    compiled_free_join,
+    free_join,
+    generic_join,
+    to_sorted_tuples,
+)
+from repro.core.capacity import CapacityPlan, agm_bound, plan_capacities
 from repro.core.colt import Colt
+from repro.core.compiled import AdaptiveExecutor
 from repro.core.engine import ExecStats, execute, materialize
-from repro.core.optimizer import optimize
+from repro.core.optimizer import Est, estimate_prefixes, optimize
 from repro.core.plan import (
     BinaryPlan,
     FreeJoinPlan,
@@ -17,8 +26,15 @@ from repro.core.plan import (
 )
 
 __all__ = [
+    "AdaptiveExecutor",
+    "CapacityPlan",
+    "Est",
+    "agm_bound",
     "binary_join",
+    "compiled_free_join",
+    "estimate_prefixes",
     "free_join",
+    "plan_capacities",
     "generic_join",
     "to_sorted_tuples",
     "Colt",

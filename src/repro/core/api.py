@@ -4,6 +4,13 @@ Each driver takes a query, relations, and a binary plan (tree). Bushy plans
 are decomposed into left-deep stages (Sec 2.2); every non-root stage is
 materialized into a fresh relation before its parent runs — the paper's
 (intentionally simple) materialization strategy.
+
+`free_join(compiled=True)` (or `compiled_free_join`) routes the root stage
+through the static-shape executor instead: query -> cost-based binary plan
+-> binary2fj -> factor -> capacity.plan_capacities -> compiled.
+AdaptiveExecutor. No manual capacities — buffer sizes come from the
+optimizer's estimates capped by the AGM bound, and overflow is recovered by
+per-node geometric growth.
 """
 from __future__ import annotations
 
@@ -33,6 +40,14 @@ def _stage_atoms(leaves, query: Query, stage_schemas: dict[str, tuple[str, ...]]
     return atoms
 
 
+def _decompose(plan_tree: BinaryPlan | Atom):
+    """Stages of a plan tree; a bare Atom (single-atom query) is its own
+    root stage."""
+    if isinstance(plan_tree, Atom):
+        return [("__root", [plan_tree])]
+    return plan_tree.decompose()
+
+
 def _run_stages(
     query: Query,
     relations: dict[str, Relation],
@@ -46,7 +61,7 @@ def _run_stages(
 ):
     rels = dict(relations)
     stage_schemas: dict[str, tuple[str, ...]] = {}
-    stages = plan_tree.decompose()
+    stages = _decompose(plan_tree)
     result = None
     for name, leaves in stages:
         atoms = _stage_atoms(leaves, query, stage_schemas)
@@ -98,9 +113,16 @@ def free_join(
     agg: str | None = None,
     dynamic_cover: bool = True,
     stats: engine.ExecStats | None = None,
+    compiled: bool = False,
 ):
     """The full Free Join system: cost-based binary plan -> binary2fj ->
-    factor -> COLT + vectorized execution (the paper's Sec 5 configuration)."""
+    factor -> COLT + vectorized execution (the paper's Sec 5 configuration).
+
+    compiled=True instead runs the root stage on the static-shape executor
+    with planner-derived capacities (mode/dynamic_cover/stats apply to the
+    eager path only)."""
+    if compiled:
+        return compiled_free_join(query, relations, plan_tree, agg=agg)
     if plan_tree is None:
         plan_tree = optimize(query, relations)
     return _run_stages(
@@ -113,6 +135,63 @@ def free_join(
         agg=agg,
         stats=stats,
     )
+
+
+def compiled_free_join(
+    query: Query,
+    relations: dict[str, Relation],
+    plan_tree: BinaryPlan | Atom | None = None,
+    *,
+    agg: str | None = "count",
+    impl: str = "jnp",
+    budget: int = 32,
+    safety: float = 2.0,
+    compact_threshold: float = 0.25,
+    jit: bool = True,
+    info: dict | None = None,
+):
+    """Compiled driver, no manual capacities (see module docstring).
+
+    Non-root stages of a bushy plan are materialized eagerly; the root stage
+    runs on compiled.AdaptiveExecutor sized by capacity.plan_capacities.
+    Returns the eager contract: a count for agg="count", else (bound, mult)
+    over live rows. `info`, if given, receives the runner, capacity plan,
+    and retry counters for inspection."""
+    from repro.core.capacity import plan_capacities
+    from repro.core.compiled import AdaptiveExecutor
+
+    if plan_tree is None:
+        plan_tree = optimize(query, relations)
+    rels = dict(relations)
+    stage_schemas: dict[str, tuple[str, ...]] = {}
+    stages = _decompose(plan_tree)
+    for name, leaves in stages[:-1]:  # non-root stages: eager materialization
+        atoms = _stage_atoms(leaves, query, stage_schemas)
+        sub_q = Query(atoms)
+        fj = factor(binary2fj(atoms, sub_q))
+        bound, mult = engine.execute(fj, rels, mode=_trie_modes(fj, "colt"), agg=None)
+        rels[name] = Relation(name, engine.materialize(bound, mult, sub_q.head))
+        stage_schemas[name] = sub_q.head
+    _, leaves = stages[-1]
+    atoms = _stage_atoms(leaves, query, stage_schemas)
+    sub_q = Query(atoms)
+    fj = factor(binary2fj(atoms, sub_q))
+    if any(rels[a.alias].num_rows == 0 for a in atoms):
+        # StaticTrie needs >= 1 row; an empty input means an empty join
+        if agg == "count":
+            return 0
+        return {v: np.zeros(0, np.int64) for v in sub_q.head}, np.zeros(0, np.int64)
+    cap_plan = plan_capacities(fj, rels, safety=safety, compact_threshold=compact_threshold)
+    runner = AdaptiveExecutor(fj, cap_plan, impl=impl, budget=budget, agg=agg, jit=jit)
+    out = runner.run_relations(rels)
+    if info is not None:
+        info.update(
+            runner=runner,
+            cap_plan=runner.cap_plan,
+            retries=runner.retries,
+            compiles=runner.compiles,
+        )
+    return out
 
 
 def binary_join(
@@ -157,7 +236,7 @@ def generic_join(
             plan_tree = optimize(query, relations)
         order: list[str] = []
         stage_schemas: dict[str, tuple[str, ...]] = {}
-        for name, leaves in plan_tree.decompose():
+        for name, leaves in _decompose(plan_tree):
             atoms = _stage_atoms(leaves, query, stage_schemas)
             sub_q = Query(atoms)
             fj = factor(binary2fj(atoms, sub_q))

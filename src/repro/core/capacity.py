@@ -1,0 +1,167 @@
+"""Capacity planning for the compiled (static-shape) Free Join path.
+
+The compiled executor (core/compiled.py) runs every plan node into a
+fixed-capacity frontier buffer; picking those capacities used to be the
+caller's problem. This module derives them from the optimizer's per-prefix
+cardinality estimates (optimizer.estimate_prefixes), capped by the AGM
+bound of the prefix sub-query — the estimates give the expected frontier,
+the AGM bound gives a sound worst case, and a safety factor in between
+absorbs estimation error. Capacities are rounded up to the kernel block
+size so the Pallas grids stay aligned.
+
+The planner also schedules *frontier compaction*: when a node's probes are
+estimated to kill enough lanes that the live fraction drops below a
+threshold, the plan records a compacted (smaller) capacity for the frontier
+going into the next node; the runner squeezes the valid lanes densely into
+that buffer (kernels/compact.py), so all later nodes pay for live rows
+rather than for the largest buffer ever allocated.
+
+Under-estimates are recoverable: every buffer overflow is detected per node
+and the adaptive runner doubles exactly the offending capacity and retries
+(see compiled.AdaptiveExecutor), so the plan here only has to be right on
+average, not in the worst case.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+from repro.core.optimizer import NodeEstimate, estimate_prefixes
+from repro.core.plan import FreeJoinPlan
+from repro.kernels.csr_expand import OBLK
+from repro.relational.relation import Relation
+
+try:  # scipy ships in the container; keep a sound fallback if absent
+    from scipy.optimize import linprog as _linprog
+except Exception:  # pragma: no cover
+    _linprog = None
+
+
+def agm_bound(edges: dict[str, tuple[str, ...]], sizes: dict[str, float]) -> float:
+    """AGM bound of a join: min over fractional edge covers x of
+    prod_R |R|^x_R, via the LP  min sum x_R log|R|  s.t. every variable is
+    covered. Falls back to a greedy integral cover (still a valid upper
+    bound, just looser) when scipy is unavailable."""
+    aliases = [a for a, vs in edges.items() if vs]
+    variables = sorted({v for a in aliases for v in edges[a]})
+    if not aliases or not variables:
+        return 1.0
+    logs = [math.log(max(1.0, sizes[a])) for a in aliases]
+    if _linprog is not None:
+        a_ub = [[-1.0 if v in edges[a] else 0.0 for a in aliases] for v in variables]
+        res = _linprog(logs, A_ub=a_ub, b_ub=[-1.0] * len(variables), bounds=(0, 1), method="highs")
+        if res.status == 0:
+            return float(math.exp(res.fun))
+    cover = 0.0
+    for v in variables:  # greedy integral cover: cheapest edge per variable
+        cover += min(lg for a, lg in zip(aliases, logs) if v in edges[a])
+    return float(math.exp(min(cover, sum(logs))))
+
+
+def _round_block(x: float, block: int) -> int:
+    return max(block, int(math.ceil(x / block)) * block)
+
+
+@dataclass(frozen=True)
+class CapacityPlan:
+    """Static per-node frontier sizing for one compiled plan.
+
+    capacities[i] is the expansion buffer for the i-th executed node;
+    compact_to[i] (or None) is the capacity the frontier is squeezed into
+    at that node's compact point. compact_probe[i] says where that point
+    is: the number of probes run before compacting — mid-node when an early
+    probe is predicted to kill most lanes (the remaining probes then run at
+    the compacted width, budget x fewer gather rounds each), len(probes)
+    for after the whole node. estimates/agm record where the numbers came
+    from (estimates per node, AGM bound of the node's prefix sub-query)."""
+
+    capacities: tuple[int, ...]
+    compact_to: tuple[int | None, ...]
+    compact_probe: tuple[int, ...] = ()
+    estimates: tuple[NodeEstimate, ...] = ()
+    agm: tuple[float, ...] = ()
+    block: int = OBLK
+
+    def grow(self, node: int, *, compaction: bool = False) -> "CapacityPlan":
+        """Double one node's capacity (the adaptive runner's overflow
+        response). Growing a compaction target past its node capacity
+        disables that compaction instead."""
+        if compaction:
+            cur = self.compact_to[node]
+            new = None if cur is None or 2 * cur >= self.capacities[node] else 2 * cur
+            ct = tuple(new if i == node else c for i, c in enumerate(self.compact_to))
+            return replace(self, compact_to=ct)
+        caps = tuple(2 * c if i == node else c for i, c in enumerate(self.capacities))
+        # a bigger buffer lowers the live fraction; keep compaction targets
+        ct = tuple(
+            None if i == node and c is not None and c >= caps[node] else c
+            for i, c in enumerate(self.compact_to)
+        )
+        return replace(self, capacities=caps, compact_to=ct)
+
+    def __str__(self):
+        parts = []
+        for i, (cap, ct) in enumerate(zip(self.capacities, self.compact_to)):
+            at = f"@p{self.compact_probe[i]}" if ct is not None and self.compact_probe else ""
+            parts.append(f"n{i}:{cap}" + (f"->{ct}{at}" if ct is not None else ""))
+        return "CapacityPlan[" + ", ".join(parts) + "]"
+
+
+def plan_capacities(
+    plan: FreeJoinPlan,
+    relations: dict[str, Relation],
+    *,
+    safety: float = 2.0,
+    block: int = OBLK,
+    compact_threshold: float = 0.25,
+    max_capacity: int = 1 << 22,
+) -> CapacityPlan:
+    """Derive a CapacityPlan for `plan` over `relations` (see module doc).
+
+    safety: multiplier on the cardinality estimates; compact_threshold:
+    schedule compaction after a node when est-after / capacity falls below
+    this; max_capacity: clamp on planned (not grown) capacities."""
+    from repro.core.compiled import _static_schedule  # deferred: avoids a cycle
+
+    schedule, _ = _static_schedule(plan)
+    estimates = estimate_prefixes(plan, relations)
+    sizes = {
+        a: float(max(1, relations[a].num_rows))
+        for a in {sa.alias for node in plan.nodes for sa in node}
+    }
+    prefix: dict[str, tuple[str, ...]] = {a: () for a in sizes}
+    caps: list[int] = []
+    compact: list[int | None] = []
+    compact_probe: list[int] = []
+    agms: list[float] = []
+    for (k, cover, probes), est in zip(schedule, estimates):
+        prefix[cover.alias] = prefix[cover.alias] + tuple(cover.vars)
+        bound = agm_bound(prefix, sizes)
+        cap = _round_block(min(max(1.0, est.expand) * safety, bound, float(max_capacity)), block)
+        last = est is estimates[-1]
+        # earliest probe after which the predicted live fraction collapses:
+        # compacting right there lets every remaining probe (and all later
+        # nodes) run at the squeezed width
+        target: int | None = None
+        cp_idx = len(probes)
+        for j, sa in enumerate(probes):
+            prefix[sa.alias] = prefix[sa.alias] + tuple(sa.vars)
+            more_work = (j + 1 < len(probes)) or not last
+            if target is not None or not more_work:
+                continue
+            a_est = est.probe_after[j]
+            t = _round_block(min(max(1.0, a_est) * safety, agm_bound(prefix, sizes)), block)
+            if a_est < compact_threshold * cap and t < cap:
+                target, cp_idx = t, j + 1
+        caps.append(cap)
+        compact.append(target)
+        compact_probe.append(cp_idx)
+        agms.append(bound)
+    return CapacityPlan(
+        capacities=tuple(caps),
+        compact_to=tuple(compact),
+        compact_probe=tuple(compact_probe),
+        estimates=tuple(estimates),
+        agm=tuple(agms),
+        block=block,
+    )

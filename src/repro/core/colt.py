@@ -30,6 +30,8 @@ Variants (Fig. 17 ablation):
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.relational.npkit import HashTable, csr_expand, group_by
@@ -122,8 +124,6 @@ class Colt:
         """Materialize trie depth `depth` (must equal forced_depth). With
         `alive` (sorted unique parent gids), only sub-tries of those parents
         are built — COLT's lazy expansion, batched."""
-        import time
-
         t0 = time.perf_counter_ns()
         assert depth == self.forced_depth and depth < self.L
         ng = self.num_groups(depth)

@@ -12,14 +12,34 @@ under jit on a device mesh:
   level skips the build entirely.
 * The frontier is a capacity-bounded buffer with a valid mask. Iteration is
   `expand_counted` (prefix-sum + binary-search addressing — the csr_expand
-  kernel); probing is the hash_probe kernel. Overflow (frontier > capacity)
-  is detected and reported, never silent — capacities come from cardinality
-  estimates or the AGM bound.
+  kernel); probing is the hash_probe kernel. When the planner predicts a
+  node's probes kill most lanes, the frontier is *compacted* (prefix-sum
+  scatter, kernels/compact.py) into a smaller buffer so later nodes pay for
+  live rows, not for the largest buffer ever allocated.
 * Bag semantics via a mult column; factorized counting is decided statically
   from the plan (cover at its last level whose vars are never used again).
 
-Output: agg="count" returns (count, overflowed); agg=None returns
-(bound columns padded to the final capacity, valid mask, mult, overflowed).
+The planner/runner contract (this is the driver stack api.free_join uses
+with compiled=True):
+
+* capacity.plan_capacities derives a CapacityPlan — per-node expansion
+  capacities plus compaction targets — from the optimizer's per-prefix
+  cardinality estimates capped by the AGM bound. No manual capacities.
+* make_executor builds the jit-able executor for one capacity vector. Every
+  buffer overflow is detected per node and reported, never silent:
+  agg="count" returns (count, ovf_expand, ovf_compact); agg=None returns
+  (bound columns padded to the final capacity, valid mask, mult,
+  ovf_expand, ovf_compact), where the ovf_* are per-executed-node bool
+  vectors.
+* AdaptiveExecutor wraps make_executor in an overflow-retry loop: on
+  overflow it geometrically doubles exactly the offending node's capacity
+  (or compaction target) and re-runs, caching one compiled executor per
+  capacity vector — steady-state traffic never recompiles and never
+  overflows, because the grown plan is remembered.
+
+make_count_fn/count_query keep the original count-only surface (used by
+core/distributed.py under shard_map, where the retry loop runs outside the
+collective).
 """
 from __future__ import annotations
 
@@ -28,6 +48,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.plan import FreeJoinPlan
 from repro.kernels import ops
@@ -150,15 +171,42 @@ class StaticTrie:
         return [self.sorted_cols[v][kp] for v in lv], members
 
 
-def make_count_fn(plan: FreeJoinPlan, capacities: list[int], impl: str = "jnp", budget: int = 32):
-    """Build a jit-able COUNT(*) executor for `plan`.
+def make_executor(
+    plan: FreeJoinPlan,
+    capacities,
+    *,
+    compact_to=None,
+    compact_probe=None,
+    impl: str = "jnp",
+    budget: int = 32,
+    agg: str | None = "count",
+):
+    """Build a jit-able executor for `plan` (see module docstring).
 
-    Returns fn(rel_cols: {alias: {var: (N,) int32}}) -> (count, overflowed).
-    Capacities: one static frontier capacity per plan node.
+    capacities: one static expansion capacity per executed node; compact_to:
+    optional per-node compaction target (None = keep the buffer);
+    compact_probe: per node, how many probes run before compacting (default
+    all — compact after the node; smaller values compact mid-node so the
+    remaining probes run at the squeezed width). Returns
+    fn(rel_cols: {alias: {var: (N,) int32}}) ->
+      agg="count":  (count, ovf_expand, ovf_compact)
+      agg=None:     (bound, valid, mult, ovf_expand, ovf_compact)
+    where ovf_expand/ovf_compact are (num_executed_nodes,) bool vectors —
+    which node's buffer overflowed, for the adaptive runner.
     """
     plan.validate()
     schedule, level_ops = _static_schedule(plan)
-    assert len(capacities) >= len(schedule), "one capacity per executed node"
+    nsched = len(schedule)
+    capacities = tuple(int(c) for c in capacities[:nsched])
+    assert len(capacities) == nsched, "one capacity per executed node"
+    compact_to = tuple(compact_to[:nsched]) if compact_to is not None else (None,) * nsched
+    assert len(compact_to) == nsched, "one compaction target per executed node"
+    compact_probe = (
+        tuple(compact_probe[:nsched])
+        if compact_probe
+        else tuple(len(probes) for _, _, probes in schedule)
+    )
+    assert len(compact_probe) == nsched, "one compact point per executed node"
 
     def run(rel_cols: dict[str, dict[str, jnp.ndarray]]):
         tries = {a: StaticTrie(rel_cols[a], level_ops[a], impl, budget) for a in level_ops}
@@ -169,14 +217,31 @@ def make_count_fn(plan: FreeJoinPlan, capacities: list[int], impl: str = "jnp", 
         mult = jnp.ones(1, jnp.int32)  # int64 needs x64; counts < 2^31 here
         bound: dict[str, jnp.ndarray] = {}
         gid: dict[str, jnp.ndarray] = {}
-        overflow = jnp.zeros((), dtype=bool)
-        for (k, cover, probes), c_next in zip(schedule, capacities):
+        ovf_expand = [jnp.zeros((), bool) for _ in range(nsched)]
+        ovf_compact = [jnp.zeros((), bool) for _ in range(nsched)]
+
+        def squeeze(bound, gid, mult, valid, cap, c_compact, i):
+            """Pack the valid lanes into a fresh c_compact-wide frontier."""
+            src, live = ops.compact_indices(valid, c_compact, impl=impl)
+            ovf_compact[i] = live > c_compact
+            srcc = jnp.clip(src, 0, cap - 1)
+            bound = {v: a[srcc] for v, a in bound.items()}
+            gid = {a: arr[srcc] for a, arr in gid.items()}
+            mult = mult[srcc]
+            valid = jnp.arange(c_compact, dtype=jnp.int32) < live
+            return bound, gid, mult, valid, c_compact
+
+        for i, ((k, cover, probes), c_next, c_compact, cp_idx) in enumerate(
+            zip(schedule, capacities, compact_to, compact_probe)
+        ):
             t = tries[cover.alias]
             d = depth[cover.alias]
             g = gid.get(cover.alias, jnp.zeros(cap, jnp.int32))
             last = d == t.L - 1
-            needed = _needed_later_static(plan, k, probes)
-            if not (set(cover.vars) & needed) and last and not (set(cover.vars) & set(bound)):
+            needed = _needed_later_static(plan, k, probes, agg)
+            if agg == "count" and not (set(cover.vars) & needed) and last and not (
+                set(cover.vars) & set(bound)
+            ):
                 # factorized count (static decision)
                 mult = mult * jnp.where(valid, t.rows_under(d, g), 1).astype(jnp.int32)
                 gid.pop(cover.alias, None)
@@ -185,7 +250,7 @@ def make_count_fn(plan: FreeJoinPlan, capacities: list[int], impl: str = "jnp", 
                 base, counts = t.iter_counts(d, g, last)
                 counts = jnp.where(valid, counts, 0)
                 fr, member, vnew, total = ops.expand_counted(base, counts, c_next, impl=impl)
-                overflow = overflow | (total > c_next)
+                ovf_expand[i] = total > c_next
                 frc = jnp.clip(fr, 0, cap - 1)
                 memc = jnp.clip(member, 0, max(t.n - 1, 0))
                 bound = {v: a[frc] for v, a in bound.items()}
@@ -206,7 +271,8 @@ def make_count_fn(plan: FreeJoinPlan, capacities: list[int], impl: str = "jnp", 
                     gid.pop(cover.alias, None)
                 else:
                     gid[cover.alias] = new_g
-            for sa in probes:
+            compacted = False
+            for j, sa in enumerate(probes):
                 tp = tries[sa.alias]
                 dp = depth[sa.alias]
                 gp = gid.get(sa.alias, jnp.zeros(cap, jnp.int32))
@@ -220,19 +286,47 @@ def make_count_fn(plan: FreeJoinPlan, capacities: list[int], impl: str = "jnp", 
                     gid.pop(sa.alias, None)
                 else:
                     gid[sa.alias] = childc
-        count = jnp.sum(jnp.where(valid, mult, 0))
-        return count, overflow
+                if c_compact is not None and not compacted and j + 1 >= cp_idx and c_compact < cap:
+                    # squeeze dead lanes out mid-node: the remaining probes
+                    # (and all later nodes) run at c_compact
+                    bound, gid, mult, valid, cap = squeeze(
+                        bound, gid, mult, valid, cap, c_compact, i
+                    )
+                    compacted = True
+            if c_compact is not None and not compacted and c_compact < cap:
+                # probe-less node (or unreached compact point): after-node
+                bound, gid, mult, valid, cap = squeeze(bound, gid, mult, valid, cap, c_compact, i)
+        oe = jnp.stack(ovf_expand) if nsched else jnp.zeros(0, bool)
+        oc = jnp.stack(ovf_compact) if nsched else jnp.zeros(0, bool)
+        if agg == "count":
+            return jnp.sum(jnp.where(valid, mult, 0)), oe, oc
+        return bound, valid, mult, oe, oc
 
     return run
 
 
-def _needed_later_static(plan: FreeJoinPlan, k: int, probes) -> set[str]:
+def make_count_fn(plan: FreeJoinPlan, capacities: list[int], impl: str = "jnp", budget: int = 32):
+    """Original count-only surface: fn(rel_cols) -> (count, overflowed).
+    One scalar overflow flag; no compaction (shard_map-friendly — see
+    core/distributed.py)."""
+    inner = make_executor(plan, capacities, impl=impl, budget=budget, agg="count")
+
+    def run(rel_cols):
+        count, oe, oc = inner(rel_cols)
+        return count, oe.any() | oc.any()
+
+    return run
+
+
+def _needed_later_static(plan: FreeJoinPlan, k: int, probes, agg: str | None = "count") -> set[str]:
     need: set[str] = set()
     for sa in probes:
         need |= set(sa.vars)
     for node in plan.nodes[k + 1 :]:
         for sa in node:
             need |= set(sa.vars)
+    if agg != "count":
+        need |= set(plan.query.head)
     return need
 
 
@@ -245,12 +339,106 @@ def count_query(
     budget: int = 32,
 ):
     """Convenience: run the compiled COUNT on host numpy relations."""
-    rel_cols = {
-        a: {v: jnp.asarray(relations[a].columns[v], jnp.int32) for v in relations[a].schema}
-        for a in {sa.alias for node in plan.nodes for sa in node}
-    }
+    rel_cols = relations_to_cols(plan, relations)
     fn = make_count_fn(plan, capacities, impl, budget)
     if jit:
         fn = jax.jit(fn)
     count, overflow = fn(rel_cols)
     return int(count), bool(overflow)
+
+
+def relations_to_cols(plan: FreeJoinPlan, relations) -> dict[str, dict[str, jnp.ndarray]]:
+    """Device int32 columns for every alias the plan touches."""
+    return {
+        a: {v: jnp.asarray(relations[a].columns[v], jnp.int32) for v in relations[a].schema}
+        for a in {sa.alias for node in plan.nodes for sa in node}
+    }
+
+
+class AdaptiveExecutor:
+    """Overflow-retrying driver around make_executor (see module docstring).
+
+    Runs the executor for the current CapacityPlan; if any node reports
+    overflow, doubles exactly that node's capacity (or compaction target)
+    and re-runs. Compiled executors are cached per capacity vector and the
+    grown plan replaces the initial one, so a stream of similar queries
+    pays the retry + recompile once and then runs overflow-free.
+    """
+
+    def __init__(
+        self,
+        plan: FreeJoinPlan,
+        cap_plan,
+        *,
+        impl: str = "jnp",
+        budget: int = 32,
+        agg: str | None = "count",
+        jit: bool = True,
+        max_retries: int = 12,
+    ):
+        plan.validate()
+        self.plan = plan
+        self.cap_plan = cap_plan
+        self.impl = impl
+        self.budget = budget
+        self.agg = agg
+        self.jit = jit
+        self.max_retries = max_retries
+        self.retries = 0  # total overflow re-runs across calls
+        self._cache: dict[tuple, object] = {}
+
+    @property
+    def compiles(self) -> int:
+        return len(self._cache)
+
+    def _fn(self, cp):
+        compact_probe = getattr(cp, "compact_probe", ())
+        key = (cp.capacities, cp.compact_to, compact_probe)
+        if key not in self._cache:
+            fn = make_executor(
+                self.plan,
+                cp.capacities,
+                compact_to=cp.compact_to,
+                compact_probe=compact_probe,
+                impl=self.impl,
+                budget=self.budget,
+                agg=self.agg,
+            )
+            self._cache[key] = jax.jit(fn) if self.jit else fn
+        return self._cache[key]
+
+    def __call__(self, rel_cols: dict[str, dict[str, jnp.ndarray]]):
+        """agg="count" -> count scalar; agg=None -> (bound, valid, mult)."""
+        cp = self.cap_plan
+        for _ in range(self.max_retries + 1):
+            out = self._fn(cp)(rel_cols)
+            oe = np.asarray(out[-2])
+            oc = np.asarray(out[-1])
+            if not (oe.any() or oc.any()):
+                self.cap_plan = cp  # steady state: keep the grown plan
+                result = out[:-2]
+                return result[0] if self.agg == "count" else result
+            for i in np.flatnonzero(oc):
+                cp = cp.grow(int(i), compaction=True)
+            for i in np.flatnonzero(oe):
+                cp = cp.grow(int(i))
+            self.retries += 1
+        raise RuntimeError(
+            f"frontier overflow persists after {self.max_retries} retries: {cp}"
+        )
+
+    def run_relations(self, relations):
+        """Convenience: host relations in, host results out."""
+        out = self(relations_to_cols(self.plan, relations))
+        if self.agg == "count":
+            return int(out)
+        return materialize_compiled(*out)
+
+
+def materialize_compiled(bound, valid, mult):
+    """Strip padding lanes from an agg=None result: returns (cols, mult) as
+    host numpy arrays over live rows only (the eager engine's contract —
+    expand duplicate multiplicities with engine.materialize)."""
+    v = np.asarray(valid)
+    cols = {name: np.asarray(a)[v].astype(np.int64) for name, a in bound.items()}
+    return cols, np.asarray(mult)[v].astype(np.int64)

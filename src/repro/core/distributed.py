@@ -36,6 +36,11 @@ from repro.relational.npkit import mix64
 from repro.relational.relation import Relation
 from repro.relational.schema import Query
 
+try:  # top-level alias only exists on newer jax
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
+
 
 def hypercube_shares(query: Query, sizes: dict[str, int], num_shards: int) -> dict[str, int]:
     """Choose shares p_v (prod = num_shards, powers of two) minimizing the
@@ -202,7 +207,7 @@ def spmd_count(
     dense_j = jax.tree.map(jnp.asarray, dense)
     counts_j = jax.tree.map(jnp.asarray, counts)
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             per_shard,
             mesh=mesh,
             in_specs=(

@@ -69,17 +69,29 @@ def execute(
     dynamic_cover: bool = True,
     agg: str | None = None,
     stats: ExecStats | None = None,
+    tries: dict[str, Colt] | None = None,
 ):
     """Run a Free Join plan. Returns (bound, mult) where bound maps each
     query variable to a column and mult is the per-row multiplicity — or the
-    scalar count when agg == "count"."""
+    scalar count when agg == "count".
+
+    `tries` lets a caller reuse already-(partially-)built Colt tries across
+    calls of the same plan shape; stats.build_ns then accounts only the
+    forcing done by this call (before/after snapshot, not the tries'
+    lifetime totals)."""
     plan.validate()
     parts = plan.partitions()
     modes = mode if isinstance(mode, dict) else {a: mode for a in parts}
-    tries = {
-        alias: Colt(relations[alias], parts[alias], mode=modes.get(alias, "colt"))
-        for alias in parts
-    }
+    if tries is None:
+        # construction may force levels (simple/slt modes): that build time
+        # belongs to this call, so the snapshot baseline is zero
+        build_ns_before = 0
+        tries = {
+            alias: Colt(relations[alias], parts[alias], mode=modes.get(alias, "colt"))
+            for alias in parts
+        }
+    else:
+        build_ns_before = sum(t.build_ns for t in tries.values())
     depth = {alias: 0 for alias in parts}
     f = Frontier(n=1, mult=np.ones(1, dtype=np.int64))
 
@@ -116,7 +128,7 @@ def execute(
             break
 
     if stats is not None:
-        stats.build_ns = sum(t.build_ns for t in tries.values())
+        stats.build_ns += sum(t.build_ns for t in tries.values()) - build_ns_before
     if agg == "count":
         return int(f.mult.sum())
     return f.bound, f.mult

@@ -1,4 +1,6 @@
-"""A small cost-based optimizer producing binary join plans.
+"""A small cost-based optimizer producing binary join plans, plus the
+per-prefix cardinality estimates that drive the compiled path's capacity
+planner (core/capacity.py).
 
 The paper uses DuckDB's optimizer; DuckDB is not available in this
 container, so we implement the classic textbook estimator: greedy left-deep
@@ -13,28 +15,33 @@ regime).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import numpy as np
 
-from repro.core.plan import BinaryPlan, linear
+from repro.core.plan import BinaryPlan, FreeJoinPlan, linear
 from repro.relational.relation import Relation
 from repro.relational.schema import Atom, Query
 
 
-class _Est:
+class Est:
+    """A cardinality estimate: expected row count plus per-variable distinct
+    counts (the state threaded through the System-R style estimator)."""
+
     def __init__(self, card: float, distinct: dict[str, float], atoms: list[Atom]):
         self.card = card
         self.distinct = distinct
         self.atoms = atoms
 
 
-def _base_est(atom: Atom, rel: Relation, bad: bool) -> _Est:
+def base_est(atom: Atom, rel: Relation, bad: bool = False) -> Est:
     if bad:
-        return _Est(1.0, {v: 1.0 for v in atom.vars}, [atom])
+        return Est(1.0, {v: 1.0 for v in atom.vars}, [atom])
     d = {v: float(max(1, len(np.unique(rel.columns[v])))) for v in atom.vars}
-    return _Est(float(max(1, rel.num_rows)), d, [atom])
+    return Est(float(max(1, rel.num_rows)), d, [atom])
 
 
-def _join_est(a: _Est, b: _Est) -> _Est:
+def join_est(a: Est, b: Est) -> Est:
     shared = set(a.distinct) & set(b.distinct)
     denom = 1.0
     for v in shared:
@@ -44,11 +51,11 @@ def _join_est(a: _Est, b: _Est) -> _Est:
     for v, dv in b.distinct.items():
         d[v] = min(d.get(v, float("inf")), dv, card)
     d = {v: min(dv, card) for v, dv in d.items()}
-    return _Est(card, d, a.atoms + b.atoms)
+    return Est(card, d, a.atoms + b.atoms)
 
 
-def optimize(query: Query, relations: dict[str, Relation], bad: bool = False) -> BinaryPlan:
-    ests = [_base_est(a, relations[a.alias], bad) for a in query.atoms]
+def optimize(query: Query, relations: dict[str, Relation], bad: bool = False) -> BinaryPlan | Atom:
+    ests = [base_est(a, relations[a.alias], bad) for a in query.atoms]
     if bad:
         # balanced bushy over input order (all estimates tie at 1)
         nodes: list = list(query.atoms)
@@ -59,14 +66,14 @@ def optimize(query: Query, relations: dict[str, Relation], bad: bool = False) ->
             if len(nodes) % 2:
                 nxt.append(nodes[-1])
             nodes = nxt
-        return nodes[0] if isinstance(nodes[0], BinaryPlan) else BinaryPlan(nodes[0], nodes[0])
+        return nodes[0]  # single-atom queries get the atom, not a self-join
     # greedy left-deep: best starting pair, then best extension
     best_pair, best_card = None, float("inf")
     for i in range(len(ests)):
         for j in range(len(ests)):
             if i == j or not (set(ests[i].distinct) & set(ests[j].distinct)):
                 continue
-            e = _join_est(ests[i], ests[j])
+            e = join_est(ests[i], ests[j])
             # prefer iterating the bigger relation first (build on the smaller)
             if e.card < best_card or (
                 e.card == best_card and best_pair and ests[i].card > ests[best_pair[0]].card
@@ -74,7 +81,7 @@ def optimize(query: Query, relations: dict[str, Relation], bad: bool = False) ->
                 best_pair, best_card = (i, j), e.card
     if best_pair is None:
         best_pair = (0, 1) if len(ests) > 1 else (0, 0)
-    cur = _join_est(ests[best_pair[0]], ests[best_pair[1]]) if len(ests) > 1 else ests[0]
+    cur = join_est(ests[best_pair[0]], ests[best_pair[1]]) if len(ests) > 1 else ests[0]
     used = set(best_pair)
     order = [query.atoms[best_pair[0]]] + ([query.atoms[best_pair[1]]] if len(ests) > 1 else [])
     while len(used) < len(ests):
@@ -83,11 +90,79 @@ def optimize(query: Query, relations: dict[str, Relation], bad: bool = False) ->
             if k in used:
                 continue
             connected = bool(set(ests[k].distinct) & set(cur.distinct))
-            e = _join_est(cur, ests[k])
+            e = join_est(cur, ests[k])
             key = (not connected, e.card)
             if best_e is None or key < best_e:
                 best_k, best_e = k, key
         used.add(best_k)
         order.append(query.atoms[best_k])
-        cur = _join_est(cur, ests[best_k])
+        cur = join_est(cur, ests[best_k])
     return linear(order)
+
+
+# ---------------------------------------------------------------------------
+# Per-prefix estimates along a Free Join plan (Sec 4.3/4.4 batched execution:
+# the compiled path sizes its static frontier buffers from these).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NodeEstimate:
+    """Frontier-size estimates around one executed plan node: `expand` is
+    the frontier right after the cover's trie level is iterated (this bounds
+    the expansion buffer), `probe_after[j]` the live frontier once the
+    node's first j+1 probes have filtered it, and `after` the frontier when
+    the whole node is done. probe_after drives compaction decisions —
+    including mid-node, between two probes of a factored plan."""
+
+    node: int  # index into plan.nodes
+    expand: float
+    after: float
+    probe_after: tuple[float, ...] = ()
+
+
+def prefix_card(prefix: dict[str, tuple[str, ...]], relations, distinct) -> float:
+    """Estimated size of the join of each relation's consumed var-prefix.
+
+    A depth-d trie level holds the distinct prefix combos, bounded by both
+    the relation's row count and the product of per-var distinct counts
+    (independence); the prefixes are then joined with the same max-distinct
+    rule as the binary estimator."""
+    cur: Est | None = None
+    for alias, vars_ in prefix.items():
+        if not vars_:
+            continue
+        d = {v: distinct[alias][v] for v in vars_}
+        card = min(float(max(1, relations[alias].num_rows)), float(np.prod(list(d.values()))))
+        e = Est(card, d, [])
+        cur = e if cur is None else join_est(cur, e)
+    return 1.0 if cur is None else cur.card
+
+
+def estimate_prefixes(
+    plan: FreeJoinPlan, relations: dict[str, Relation]
+) -> list[NodeEstimate]:
+    """Walk the plan with the compiled path's static schedule (first-listed
+    cover per node) and estimate the frontier size around every executed
+    node. One entry per executed node, aligned with the compiled schedule."""
+    from repro.core.compiled import _static_schedule  # deferred: avoids a cycle
+
+    schedule, _ = _static_schedule(plan)
+    distinct = {
+        a: {v: float(max(1, len(np.unique(relations[a].columns[v])))) for v in relations[a].schema}
+        for a in {sa.alias for node in plan.nodes for sa in node}
+    }
+    prefix: dict[str, tuple[str, ...]] = {a: () for a in distinct}
+    out: list[NodeEstimate] = []
+    for k, cover, probes in schedule:
+        prefix[cover.alias] = prefix[cover.alias] + tuple(cover.vars)
+        expand = prefix_card(prefix, relations, distinct)
+        cards = []
+        for sa in probes:
+            prefix[sa.alias] = prefix[sa.alias] + tuple(sa.vars)
+            cards.append(min(prefix_card(prefix, relations, distinct), expand))
+        after = cards[-1] if cards else expand
+        out.append(
+            NodeEstimate(node=k, expand=expand, after=after, probe_after=tuple(cards))
+        )
+    return out

@@ -49,16 +49,25 @@ def mix32(cols2d: jnp.ndarray) -> jnp.ndarray:
 def _probe_kernel(slots_ref, tkeys_ref, q_ref, out_ref, *, cap: int, budget: int):
     q = q_ref[...]  # (QBLK, K)
     h = mix32(q) & (cap - 1)  # (QBLK,)
-    res = jnp.full(h.shape, -1, dtype=jnp.int32)
-    done = jnp.zeros(h.shape, dtype=jnp.bool_)
-    for p in range(budget):
-        cand = slots_ref[...][h + p]  # VMEM vector gather
+    slots = slots_ref[...]
+    tkeys = tkeys_ref[...]
+    nkeys = tkeys.shape[0]
+
+    # rolled probe loop (fori_loop, not Python unrolling): the unrolled
+    # gather chain triggers multi-minute XLA compiles at some table shapes
+    # (seen in interpret mode on CPU); trip count is still the static budget
+    def step(p, carry):
+        res, done = carry
+        cand = slots[h + p]  # VMEM vector gather
         is_empty = cand < 0
-        krow = tkeys_ref[...][jnp.clip(cand, 0, tkeys_ref.shape[0] - 1)]  # (QBLK, K)
+        krow = tkeys[jnp.clip(cand, 0, nkeys - 1)]  # (QBLK, K)
         match = jnp.logical_and(~is_empty, (krow == q).all(axis=-1))
         hit = jnp.logical_and(match, ~done)
-        res = jnp.where(hit, cand, res)
-        done = jnp.logical_or(done, jnp.logical_or(hit, is_empty))
+        return jnp.where(hit, cand, res), done | hit | is_empty
+
+    res = jnp.full(h.shape, -1, dtype=jnp.int32)
+    done = jnp.zeros(h.shape, dtype=jnp.bool_)
+    res, done = jax.lax.fori_loop(0, budget, step, (res, done))
     out_ref[...] = res
 
 

@@ -21,6 +21,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.compact import CBLK, compact_pallas
 from repro.kernels.csr_expand import OBLK, csr_expand_pallas
 from repro.kernels.hash_probe import PROBE_BUDGET, QBLK, hash_probe_pallas, mix32
 from repro.kernels.intersect import intersect_pallas
@@ -63,19 +64,25 @@ def build_table(keys: jnp.ndarray, budget: int = PROBE_BUDGET) -> Table:
 
 @functools.partial(jax.jit, static_argnames=("budget",))
 def _probe_jnp(slots, keys, queries, budget: int):
+    # rolled as a scan, not a Python loop: XLA's CPU pipeline hits multi-
+    # minute compiles on the 32x-unrolled gather chain at some small shapes
+    # (run the tier-1 suite at 17 keys / 64 queries to reproduce); the scan
+    # compiles in milliseconds and runs identically
     cap = slots.shape[0] - budget
     h = mix32(queries) & (cap - 1)
-    res = jnp.full(h.shape, -1, dtype=jnp.int32)
-    done = jnp.zeros(h.shape, dtype=bool)
     nkeys = keys.shape[0]
-    for p in range(budget):
+
+    def step(carry, p):
+        res, done = carry
         cand = slots[h + p]
         is_empty = cand < 0
         krow = keys[jnp.clip(cand, 0, nkeys - 1)]
         match = (~is_empty) & (krow == queries).all(axis=-1)
         hit = match & ~done
-        res = jnp.where(hit, cand, res)
-        done = done | hit | is_empty
+        return (jnp.where(hit, cand, res), done | hit | is_empty), None
+
+    init = (jnp.full(h.shape, -1, dtype=jnp.int32), jnp.zeros(h.shape, dtype=bool))
+    (res, _), _ = jax.lax.scan(step, init, jnp.arange(budget, dtype=jnp.int32))
     return res
 
 
@@ -141,6 +148,31 @@ def expand_counted(
     )
     valid = jnp.arange(cap, dtype=jnp.int32) < total
     return fr[:capacity], member[:capacity], valid[:capacity], total
+
+
+def compact_indices(
+    valid: jnp.ndarray,
+    out_capacity: int,
+    impl: str = "jnp",
+):
+    """Frontier compaction: squeeze the lanes where `valid` is True densely
+    into the front of a buffer of `out_capacity` slots. Returns (src, live):
+    src[j] is the source lane of output slot j (-1 beyond the live count),
+    live is the number of valid lanes. Overflow iff live > out_capacity —
+    detected by the caller, never silent (mirrors expand_counted)."""
+    n = valid.shape[0]
+    if n == 0:
+        return jnp.full(out_capacity, -1, jnp.int32), jnp.int32(0)
+    csum = jnp.cumsum(valid.astype(jnp.int32))
+    live = csum[-1].astype(jnp.int32)
+    if impl == "jnp":
+        out = jnp.arange(out_capacity, dtype=jnp.int32)
+        src = jnp.searchsorted(csum, out + 1, side="left").astype(jnp.int32)
+        src = jnp.clip(src, 0, n - 1)
+        return jnp.where(out < live, src, -1), live
+    cap = out_capacity + ((-out_capacity) % CBLK)
+    src = compact_pallas(csum, live[None], capacity=cap, interpret=impl == "pallas_interpret")
+    return src[:out_capacity], live
 
 
 def csr_expand_capped(

@@ -28,6 +28,19 @@ def intersect_ref(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndar
     return hit, jnp.where(hit, pos, -1)
 
 
+def compact_ref(valid: jnp.ndarray, out_capacity: int):
+    """Dense packing of the True lanes of `valid` into `out_capacity` output
+    slots. Returns (src, live): src[j] = lane index of the (j+1)-th valid
+    lane or -1. Gather-free exact reference (host-side nonzero)."""
+    import numpy as np
+
+    lanes = np.flatnonzero(np.asarray(valid)).astype(np.int32)
+    live = jnp.int32(len(lanes))
+    src = np.full(out_capacity, -1, np.int32)
+    src[: min(len(lanes), out_capacity)] = lanes[:out_capacity]
+    return jnp.asarray(src), live
+
+
 def csr_expand_ref(offsets: jnp.ndarray, groups: jnp.ndarray, capacity: int):
     """Expand each groups[i] into its CSR members, densely packed into a
     buffer of `capacity` slots. Returns (frontier_row, member, valid, total).

@@ -29,6 +29,11 @@ from repro.launch.dryrun import _cost, _memory, collective_bytes  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.relational.schema import clover_query, triangle_query  # noqa: E402
 
+try:  # top-level alias only exists on newer jax
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map  # noqa: E402
+
 
 def lower_join(multi_pod: bool, rows_per_shard: int = 65536, cap: int = 1 << 20):
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -56,7 +61,7 @@ def lower_join(multi_pod: bool, rows_per_shard: int = 65536, cap: int = 1 << 20)
         spec = P(axes)
         with mesh:
             fn = jax.jit(
-                jax.shard_map(
+                shard_map(
                     per_shard,
                     mesh=mesh,
                     in_specs=(jax.tree.map(lambda _: spec, cols_sds),),

@@ -127,7 +127,7 @@ def param_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
 
 def param_shardings(params_shapes, mesh: Mesh):
     """Pytree of NamedSharding matching a pytree of ShapeDtypeStructs."""
-    flat, treedef = jax.tree.flatten_with_path(params_shapes)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
     out = []
     for path, leaf in flat:
         spec = param_spec(jax.tree_util.keystr(path), leaf.shape, mesh)
@@ -141,7 +141,9 @@ def batch_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
     dp = [a for a in ("pod", "data") if a in mesh.axis_names]
     dp_n = int(np.prod([mesh.shape[a] for a in dp]))
     if shape[0] % dp_n == 0 and shape[0] >= dp_n:
-        return P(tuple(dp), *([None] * (len(shape) - 1)))
+        # single axis as a bare name: PartitionSpec(("data",)) != P("data")
+        # on this jax version
+        return P(dp[0] if len(dp) == 1 else tuple(dp), *([None] * (len(shape) - 1)))
     if shape[0] % mesh.shape.get("data", 1) == 0 and shape[0] >= mesh.shape.get("data", 1):
         return P("data", *([None] * (len(shape) - 1)))
     if len(shape) > 1 and shape[1] % mesh.shape.get("data", 1) == 0:
@@ -159,7 +161,7 @@ def cache_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
     spec: list = [None] * len(shape)
     used_data = False
     if len(shape) >= 2 and shape[1] % dp_n == 0 and shape[1] >= dp_n:
-        spec[1] = tuple(dp)
+        spec[1] = dp[0] if len(dp) == 1 else tuple(dp)
         used_data = True
     elif len(shape) >= 3 and shape[2] % data_n == 0 and shape[2] >= data_n:
         spec[2] = "data"  # shard KV time axis (long-context, batch=1)

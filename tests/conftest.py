@@ -4,6 +4,27 @@ import pytest
 from repro.relational.relation import Relation
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavyweight model/train/serve tests, deselected by default "
+        '(run them with -m slow, or everything with -m "slow or not slow")',
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    # No pytest.ini in this repo: default to -m "not slow" here so the
+    # tier-1 suite stays fast. Any explicit -m on the command line wins.
+    if config.option.markexpr:
+        return
+    selected, deselected = [], []
+    for item in items:
+        (deselected if "slow" in item.keywords else selected).append(item)
+    if deselected:
+        config.hook.pytest_deselected(items=deselected)
+        items[:] = selected
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -10,6 +10,9 @@ from repro.models.transformer import apply_model, decode_step, init_cache, init_
 from repro.train import AdamWConfig, TrainConfig, make_train_step
 from repro.train.optimizer import init_state
 
+# ~2 min of model compiles on CPU: out of the default tier-1 run
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_forward_and_train_step(arch):

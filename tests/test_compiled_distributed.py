@@ -82,7 +82,7 @@ from repro.relational.schema import triangle_query
 from repro.relational.relation import Relation
 from repro.relational.oracle import join_oracle
 from repro.core import binary2fj, factor
-from repro.core.distributed import spmd_count
+from repro.core.distributed import spmd_count  # has the shard_map compat alias
 rng = np.random.default_rng(0)
 q = triangle_query()
 rels = {a.alias: Relation(a.alias, {v: rng.integers(0, 12, 120) for v in a.vars}) for a in q.atoms}
@@ -95,9 +95,11 @@ print("SPMD_OK", got)
 """
 
 
+@pytest.mark.slow
 def test_spmd_count_8_devices_subprocess():
     """shard_map + psum on 8 fake CPU devices (subprocess so the fake
-    device count never leaks into this test session)."""
+    device count never leaks into this test session). Slow: compiles the
+    whole executor once per device mesh in a fresh process."""
     env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8", "PYTHONPATH": "src"}
     import os
 

@@ -131,3 +131,25 @@ def test_factorized_count_equals_materialized(rng):
     c = free_join(q, rels, agg="count")
     bound, mult = free_join(q, rels)
     assert c == int(mult.sum()) == len(join_oracle(q, rels))
+
+
+def test_execute_trie_reuse_and_build_ns_snapshot(rng):
+    """Repeat execute() calls may share one Colt dict (same plan, same
+    relations): results must match and stats.build_ns must account only
+    the forcing done by each call, not the tries' lifetime totals."""
+    from repro.core.colt import Colt
+    from repro.core.engine import ExecStats, execute
+
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 50, 8) for a in q.atoms}
+    fj = factor(binary2fj(q.atoms, q))
+    want = execute(fj, rels, agg="count")
+    parts = fj.partitions()
+    tries = {a: Colt(rels[a], parts[a], mode="colt") for a in parts}
+    st = ExecStats()
+    assert execute(fj, rels, agg="count", tries=tries, stats=st) == want
+    first_build = st.build_ns
+    assert first_build > 0  # the first call forced the probed levels
+    assert execute(fj, rels, agg="count", tries=tries, stats=st) == want
+    # second call reuses the forced levels: (almost) no new build time
+    assert st.build_ns - first_build < first_build

@@ -60,6 +60,7 @@ def test_xent_loss_masking():
     assert float(loss) == pytest.approx(np.log(5), rel=1e-5)
 
 
+@pytest.mark.slow
 def test_train_loss_decreases_markov():
     tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60))
     params, opt = init_train_state(jax.random.PRNGKey(0), CFG, tcfg)
@@ -73,6 +74,7 @@ def test_train_loss_decreases_markov():
     assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.2
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_full_batch():
     adamw = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
     params, opt = init_train_state(jax.random.PRNGKey(0), CFG, TrainConfig(adamw=adamw))
@@ -117,12 +119,16 @@ def test_data_stream_deterministic_and_elastic():
 COMPRESSION_SCRIPT = r"""
 import numpy as np, jax, jax.numpy as jnp
 from repro.train.compression import compressed_psum, init_error
+try:
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
 mesh = jax.make_mesh((4,), ("data",))
 g = {"w": jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 7.3}
 def f(gl, e):
     out, e2 = compressed_psum(gl, e, "data")
     return out, e2
-fn = jax.jit(jax.shard_map(f, mesh=mesh,
+fn = jax.jit(shard_map(f, mesh=mesh,
     in_specs=(jax.sharding.PartitionSpec("data"), jax.sharding.PartitionSpec("data")),
     out_specs=(jax.sharding.PartitionSpec("data"), jax.sharding.PartitionSpec("data"))))
 err = {"w": jnp.zeros((4, 8), jnp.float32)}
@@ -139,6 +145,7 @@ print("COMP_OK")
 """
 
 
+@pytest.mark.slow
 def test_compressed_psum_subprocess():
     env = {**os.environ, "XLA_FLAGS": "--xla_force_host_platform_device_count=4", "PYTHONPATH": "src"}
     res = subprocess.run([sys.executable, "-c", COMPRESSION_SCRIPT], capture_output=True,
