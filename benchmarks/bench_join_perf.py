@@ -19,7 +19,13 @@ query (a selective probe kills most frontier lanes early):
   compiled_nocompact     AdaptiveExecutor, planner capacities, no compaction
   compiled_compact       same + frontier compaction at the planner-chosen
                          point (mid-node, right after the selective probe)
-The three rows also land in BENCH_join_perf.json (repo root) so the perf
+
+Part 3 — the compiled-distributed path on the same star query: SpmdCounter
+(hypercube partition + shard_map + psum, planner capacities per shard) on a
+2- and 4-shard mesh of fake CPU devices. Runs in a subprocess so the forced
+device count never leaks into this process's jax backend.
+
+The rows also land in BENCH_join_perf.json (repo root) so the perf
 trajectory of the compiled path is tracked PR-over-PR.
 """
 from __future__ import annotations
@@ -121,6 +127,7 @@ def run(repeats: int = 3, smoke: bool = False):
     rows.append({"name": "joinperf.J3_combined", "us": t3 * 1e6,
                  "derived": f"speedup_vs_J0={t0 / t3:.2f}x"})
     rows.extend(run_compiled_vs_eager(repeats=repeats, smoke=smoke))
+    rows.extend(run_distributed(repeats=repeats, smoke=smoke))
     return rows
 
 
@@ -161,6 +168,70 @@ def run_compiled_vs_eager(repeats: int = 3, smoke: bool = False, path: str = "BE
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")
+    return rows
+
+
+DIST_SCRIPT = r"""
+import json, sys
+import numpy as np, jax
+from benchmarks.bench_join_perf import _lowsel_data
+from benchmarks.common import timeit
+from repro.core import binary2fj, factor
+from repro.core.distributed import SpmdCounter
+shards, n, dom, repeats = map(int, sys.argv[1:5])
+q, rels = _lowsel_data(n=n, dom=dom)
+fj = factor(binary2fj(q.atoms, q))
+mesh = jax.make_mesh((shards,), ("data",))
+ctr = SpmdCounter(q, rels, fj, None, mesh)  # planner capacities per shard
+count = ctr()  # compile (+ any overflow growth) + 1st run
+t, _ = timeit(lambda: ctr(), repeats=repeats, warmup=1)
+print("DIST " + json.dumps({"us": t * 1e6, "count": count, "shards": shards,
+                            "retries": ctr.retries, "cap_plan": str(ctr.cap_plan)}))
+"""
+
+
+def run_distributed(
+    repeats: int = 3, smoke: bool = False, path: str = "BENCH_join_perf.json"
+):
+    """Compiled-distributed star-query rows (see module docstring, part 3).
+    Each shard count runs in its own subprocess with that many fake CPU
+    devices; full runs append spmd_* fields to the BENCH_join_perf.json
+    record written by run_compiled_vs_eager."""
+    import os
+    import subprocess
+    import sys as _sys
+
+    n, dom = (30_000, 3_000) if smoke else (600_000, 30_000)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rows, record = [], {}
+    for shards in (2,) if smoke else (2, 4):
+        env = {
+            **os.environ,
+            "XLA_FLAGS": f"--xla_force_host_platform_device_count={shards} "
+            + os.environ.get("XLA_FLAGS", ""),
+            "PYTHONPATH": "src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+        }
+        res = subprocess.run(
+            [_sys.executable, "-c", DIST_SCRIPT, str(shards), str(n), str(dom), str(repeats)],
+            capture_output=True, text=True, env=env, timeout=1200, cwd=root,
+        )
+        out = [ln for ln in res.stdout.splitlines() if ln.startswith("DIST ")]
+        assert out, res.stderr[-2000:]
+        rec = json.loads(out[-1][5:])
+        rows.append({
+            "name": f"joinperf.spmd_star_{shards}shard", "us": rec["us"],
+            "derived": f"count={rec['count']};retries={rec['retries']};plan={rec['cap_plan']}",
+        })
+        record[f"spmd_{shards}shard_us"] = rec["us"]
+        record[f"spmd_{shards}shard_count"] = rec["count"]
+        record[f"spmd_{shards}shard_retries"] = rec["retries"]
+    if not smoke and os.path.exists(path):
+        with open(path) as f:
+            full = json.load(f)
+        full.update(record)
+        with open(path, "w") as f:
+            json.dump(full, f, indent=2)
+            f.write("\n")
     return rows
 
 

@@ -11,9 +11,9 @@ from repro.core.api import (
 )
 from repro.core.capacity import CapacityPlan, agm_bound, plan_capacities
 from repro.core.colt import Colt
-from repro.core.compiled import AdaptiveExecutor
+from repro.core.compiled import AdaptiveExecutor, StaticSchedule
 from repro.core.engine import ExecStats, execute, materialize
-from repro.core.optimizer import Est, estimate_prefixes, optimize
+from repro.core.optimizer import Est, Stats, estimate_prefixes, optimize
 from repro.core.plan import (
     BinaryPlan,
     FreeJoinPlan,
@@ -29,6 +29,8 @@ __all__ = [
     "AdaptiveExecutor",
     "CapacityPlan",
     "Est",
+    "Stats",
+    "StaticSchedule",
     "agm_bound",
     "binary_join",
     "compiled_free_join",

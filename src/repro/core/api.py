@@ -25,7 +25,7 @@ from repro.core.plan import (
     gj_plan,
     var_order_from_fj,
 )
-from repro.core.optimizer import optimize
+from repro.core.optimizer import Stats, optimize
 from repro.relational.relation import Relation
 from repro.relational.schema import Atom, Query
 
@@ -152,6 +152,13 @@ def compiled_free_join(
 ):
     """Compiled driver, no manual capacities (see module docstring).
 
+    One planning pass serves the whole query: a single optimizer.Stats cache
+    (one np.unique per referenced column) feeds optimize and
+    plan_capacities, and the StaticSchedule computed by the planner rides on
+    the CapacityPlan into every executor build. Zero-row inputs run through
+    the executor natively (an empty relation is a trie whose every frontier
+    expansion yields zero live lanes) — no host-side gate.
+
     Non-root stages of a bushy plan are materialized eagerly; the root stage
     runs on compiled.AdaptiveExecutor sized by capacity.plan_capacities.
     Returns the eager contract: a count for agg="count", else (bound, mult)
@@ -160,9 +167,10 @@ def compiled_free_join(
     from repro.core.capacity import plan_capacities
     from repro.core.compiled import AdaptiveExecutor
 
-    if plan_tree is None:
-        plan_tree = optimize(query, relations)
     rels = dict(relations)
+    stats = Stats(rels)  # live view: sees stage relations as they land
+    if plan_tree is None:
+        plan_tree = optimize(query, rels, stats=stats)
     stage_schemas: dict[str, tuple[str, ...]] = {}
     stages = _decompose(plan_tree)
     for name, leaves in stages[:-1]:  # non-root stages: eager materialization
@@ -176,12 +184,9 @@ def compiled_free_join(
     atoms = _stage_atoms(leaves, query, stage_schemas)
     sub_q = Query(atoms)
     fj = factor(binary2fj(atoms, sub_q))
-    if any(rels[a.alias].num_rows == 0 for a in atoms):
-        # StaticTrie needs >= 1 row; an empty input means an empty join
-        if agg == "count":
-            return 0
-        return {v: np.zeros(0, np.int64) for v in sub_q.head}, np.zeros(0, np.int64)
-    cap_plan = plan_capacities(fj, rels, safety=safety, compact_threshold=compact_threshold)
+    cap_plan = plan_capacities(
+        fj, stats=stats, safety=safety, compact_threshold=compact_threshold
+    )
     runner = AdaptiveExecutor(fj, cap_plan, impl=impl, budget=budget, agg=agg, jit=jit)
     out = runner.run_relations(rels)
     if info is not None:

@@ -16,17 +16,19 @@ going into the next node; the runner squeezes the valid lanes densely into
 that buffer (kernels/compact.py), so all later nodes pay for live rows
 rather than for the largest buffer ever allocated.
 
-Under-estimates are recoverable: every buffer overflow is detected per node
-and the adaptive runner doubles exactly the offending capacity and retries
-(see compiled.AdaptiveExecutor), so the plan here only has to be right on
-average, not in the worst case.
+Under-estimates are recoverable: the executor reports every node's
+*required* total and the adaptive runner jumps exactly the offending
+capacity to that need and retries (see compiled.AdaptiveExecutor and
+distributed.spmd_count — the same plan drives both the local and the SPMD
+path), so the plan here only has to be right on average, not in the worst
+case.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 
-from repro.core.optimizer import NodeEstimate, estimate_prefixes
+from repro.core.optimizer import NodeEstimate, Stats, estimate_prefixes
 from repro.core.plan import FreeJoinPlan
 from repro.kernels.csr_expand import OBLK
 from repro.relational.relation import Relation
@@ -81,6 +83,9 @@ class CapacityPlan:
     estimates: tuple[NodeEstimate, ...] = ()
     agm: tuple[float, ...] = ()
     block: int = OBLK
+    # the query's StaticSchedule, computed once by the planner and reused by
+    # every executor build (AdaptiveExecutor, spmd_count)
+    schedule: object = field(default=None, compare=False, repr=False)
 
     def grow(self, node: int, *, compaction: bool = False) -> "CapacityPlan":
         """Double one node's capacity (the adaptive runner's overflow
@@ -99,6 +104,31 @@ class CapacityPlan:
         )
         return replace(self, capacities=caps, compact_to=ct)
 
+    def grow_to(self, node: int, need: int, *, compaction: bool = False) -> "CapacityPlan":
+        """Jump one node's capacity straight to a reported requirement (the
+        executor returns exact per-node totals), block-rounded. At least
+        doubles, so needs under-measured behind an upstream overflow still
+        make geometric progress. A compaction target grown past its node
+        capacity is disabled instead."""
+        need = int(need)
+        if compaction:
+            cur = self.compact_to[node]
+            if cur is None:
+                return self
+            new = max(2 * cur, _round_block(need, self.block))
+            ct = tuple(
+                (None if new >= self.capacities[node] else new) if i == node else c
+                for i, c in enumerate(self.compact_to)
+            )
+            return replace(self, compact_to=ct)
+        new = max(2 * self.capacities[node], _round_block(need, self.block))
+        caps = tuple(new if i == node else c for i, c in enumerate(self.capacities))
+        ct = tuple(
+            None if i == node and c is not None and c >= caps[node] else c
+            for i, c in enumerate(self.compact_to)
+        )
+        return replace(self, capacities=caps, compact_to=ct)
+
     def __str__(self):
         parts = []
         for i, (cap, ct) in enumerate(zip(self.capacities, self.compact_to)):
@@ -109,24 +139,36 @@ class CapacityPlan:
 
 def plan_capacities(
     plan: FreeJoinPlan,
-    relations: dict[str, Relation],
+    relations: dict[str, Relation] | None = None,
     *,
+    stats: Stats | None = None,
+    schedule=None,
     safety: float = 2.0,
     block: int = OBLK,
     compact_threshold: float = 0.25,
     max_capacity: int = 1 << 22,
 ) -> CapacityPlan:
-    """Derive a CapacityPlan for `plan` over `relations` (see module doc).
+    """Derive a CapacityPlan for `plan` (see module doc).
+
+    Statistics come from `stats` — any object with .size(alias) and
+    .distinct(alias, var) — or are computed from `relations`. The
+    distributed driver passes per-shard stats (sizes and distinct counts
+    shrunk by the hypercube shares); the local driver passes its query-wide
+    Stats cache. `schedule` is the query's StaticSchedule if already
+    computed; it is stored on the returned plan for executor builds.
 
     safety: multiplier on the cardinality estimates; compact_threshold:
     schedule compaction after a node when est-after / capacity falls below
     this; max_capacity: clamp on planned (not grown) capacities."""
     from repro.core.compiled import _static_schedule  # deferred: avoids a cycle
 
-    schedule, _ = _static_schedule(plan)
-    estimates = estimate_prefixes(plan, relations)
+    if stats is None:
+        stats = Stats(relations)
+    if schedule is None:
+        schedule = _static_schedule(plan)
+    estimates = estimate_prefixes(plan, stats=stats, schedule=schedule)
     sizes = {
-        a: float(max(1, relations[a].num_rows))
+        a: float(max(1, stats.size(a)))
         for a in {sa.alias for node in plan.nodes for sa in node}
     }
     prefix: dict[str, tuple[str, ...]] = {a: () for a in sizes}
@@ -134,7 +176,7 @@ def plan_capacities(
     compact: list[int | None] = []
     compact_probe: list[int] = []
     agms: list[float] = []
-    for (k, cover, probes), est in zip(schedule, estimates):
+    for (k, cover, probes), est in zip(schedule.entries, estimates):
         prefix[cover.alias] = prefix[cover.alias] + tuple(cover.vars)
         bound = agm_bound(prefix, sizes)
         cap = _round_block(min(max(1.0, est.expand) * safety, bound, float(max_capacity)), block)
@@ -164,4 +206,5 @@ def plan_capacities(
         estimates=tuple(estimates),
         agm=tuple(agms),
         block=block,
+        schedule=schedule,
     )

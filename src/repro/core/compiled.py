@@ -19,31 +19,46 @@ under jit on a device mesh:
 * Bag semantics via a mult column; factorized counting is decided statically
   from the plan (cover at its last level whose vars are never used again).
 
-The planner/runner contract (this is the driver stack api.free_join uses
-with compiled=True):
+The shared-driver contract (one planning pass serves the local *and* the
+distributed compiled paths — api.compiled_free_join and
+distributed.spmd_count are both thin drivers over the same stack):
 
+* The driver builds one optimizer.Stats cache (one np.unique per referenced
+  column) and one StaticSchedule (one plan walk) per query, and threads
+  them through optimize -> capacity.plan_capacities ->
+  optimizer.estimate_prefixes -> make_executor. The schedule rides on the
+  CapacityPlan so every later executor build reuses it.
 * capacity.plan_capacities derives a CapacityPlan — per-node expansion
-  capacities plus compaction targets — from the optimizer's per-prefix
-  cardinality estimates capped by the AGM bound. No manual capacities.
-* make_executor builds the jit-able executor for one capacity vector. Every
-  buffer overflow is detected per node and reported, never silent:
-  agg="count" returns (count, ovf_expand, ovf_compact); agg=None returns
-  (bound columns padded to the final capacity, valid mask, mult,
-  ovf_expand, ovf_compact), where the ovf_* are per-executed-node bool
-  vectors.
+  capacities plus compaction targets — from the per-prefix cardinality
+  estimates capped by the AGM bound. No manual capacities. The distributed
+  driver feeds it per-shard statistics instead (sizes and distinct counts
+  shrunk by the hypercube shares); nothing else changes.
+* make_executor builds the jit-able executor for one capacity vector.
+  Buffer pressure is reported per node as *required totals*, never silently
+  and never as mere bits: agg="count" returns (count, need_expand,
+  need_compact); agg=None returns (bound columns padded to the final
+  capacity, valid mask, mult, need_expand, need_compact). need_expand[i] is
+  the lane count node i's expansion actually required, need_compact[i] the
+  live lane count at its compact point; node i overflowed iff the need
+  exceeds its capacity (resp. compaction target), and the need tells the
+  retry loop the exact capacity to jump to.
 * AdaptiveExecutor wraps make_executor in an overflow-retry loop: on
-  overflow it geometrically doubles exactly the offending node's capacity
-  (or compaction target) and re-runs, caching one compiled executor per
+  overflow it grows exactly the offending node's capacity (or compaction
+  target) straight to the reported need (CapacityPlan.grow_to — one retry,
+  not a geometric ladder) and re-runs, caching one compiled executor per
   capacity vector — steady-state traffic never recompiles and never
   overflows, because the grown plan is remembered.
+* Zero-row relations are handled natively: an empty relation builds a
+  StaticTrie whose every frontier expansion yields zero live lanes and
+  whose probes match nothing, so drivers need no host-side empty gate.
 
-make_count_fn/count_query keep the original count-only surface (used by
-core/distributed.py under shard_map, where the retry loop runs outside the
-collective).
+make_count_fn/count_query keep the original count-only surface (manual
+capacities, scalar overflow bit) for benchmarks and dry runs;
+distributed.spmd_count uses make_executor directly and runs the grow/retry
+loop *outside* the shard_map collective.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax
@@ -62,7 +77,24 @@ class _LevelOps:
     probed: tuple[bool, ...]  # per level: consumed by probe?
 
 
-def _static_schedule(plan: FreeJoinPlan):
+@dataclass(frozen=True)
+class StaticSchedule:
+    """One static walk of a plan, computed once per query and threaded
+    through the whole driver stack (planner, estimator, executor builds).
+    entries[i] = (node index, cover subatom, probe subatoms); level_ops maps
+    alias -> per-level probe/iterate decisions."""
+
+    entries: tuple
+    level_ops: dict
+
+    def __len__(self):
+        return len(self.entries)
+
+    def __iter__(self):
+        return iter(self.entries)
+
+
+def _static_schedule(plan: FreeJoinPlan) -> StaticSchedule:
     """Walk the plan once, statically: per node pick the cover (first listed
     — plans arrive factored), mark each atom level probe/iterate."""
     parts = plan.partitions()
@@ -75,14 +107,14 @@ def _static_schedule(plan: FreeJoinPlan):
             continue
         covers = [sa for sa in plan.covers(k) if sa.vars and any(sa is s for s in subs)]
         cover = covers[0]
-        probes = [sa for sa in subs if sa is not cover]
+        probes = tuple(sa for sa in subs if sa is not cover)
         schedule.append((k, cover, probes))
         for sa in probes:
             probed[sa.alias][consumed[sa.alias]] = True
             consumed[sa.alias] += 1
         consumed[cover.alias] += 1
     level_ops = {a: _LevelOps(tuple(parts[a]), tuple(probed[a])) for a in parts}
-    return schedule, level_ops
+    return StaticSchedule(entries=tuple(schedule), level_ops=level_ops)
 
 
 class StaticTrie:
@@ -93,6 +125,13 @@ class StaticTrie:
         self.L = len(lops.levels)
         self.levels = lops.levels
         some = next(iter(cols.values()))
+        self.empty = some.shape[0] == 0
+        if self.empty:
+            # zero-row relation: keep one sentinel row so every downstream
+            # gather has a real operand; iter_counts/rows_under/probe below
+            # force zero live lanes, so the sentinel is never observable
+            cols = {k: jnp.full(1, -1, jnp.int32) for k in cols}
+            some = next(iter(cols.values()))
         n = some.shape[0]
         self.n = n
         self.cols = {k: v.astype(jnp.int32) for k, v in cols.items()}
@@ -136,11 +175,15 @@ class StaticTrie:
 
     # depth-d group sizes in rows (for factorized count / multiplicity)
     def rows_under(self, d: int, gids: jnp.ndarray) -> jnp.ndarray:
+        if self.empty:
+            return jnp.zeros(gids.shape, jnp.int32)
         if self.trivial or d == 0:
             return jnp.full(gids.shape, self.n, jnp.int32)
         return self.row_count[d - 1][gids]
 
     def probe(self, d: int, gids, key_cols):
+        if self.empty:  # nothing to match: kill every probing lane
+            return jnp.full(gids.shape, -1, jnp.int32)
         q = jnp.stack([gids.astype(jnp.int32)] + [c.astype(jnp.int32) for c in key_cols], axis=1)
         p = ops.probe(self.tables[d], q, impl=self.impl)
         child = self.g[d + 1][jnp.clip(p, 0, self.n - 1)]
@@ -149,8 +192,10 @@ class StaticTrie:
     def iter_counts(self, d: int, gids, last: bool):
         """(base, counts) for expand_counted at level d from groups `gids`.
         last=True enumerates rows; otherwise enumerates child groups."""
+        z = jnp.zeros(gids.shape, jnp.int32)
+        if self.empty:  # every expansion yields zero live lanes
+            return z, z
         if self.trivial:
-            z = jnp.zeros(gids.shape, jnp.int32)
             return z, jnp.full(gids.shape, self.n, jnp.int32)
         if last:
             base = self.kpos[d][jnp.clip(gids, 0, self.n - 1)] if d > 0 else jnp.zeros(gids.shape, jnp.int32)
@@ -180,6 +225,7 @@ def make_executor(
     impl: str = "jnp",
     budget: int = 32,
     agg: str | None = "count",
+    schedule: StaticSchedule | None = None,
 ):
     """Build a jit-able executor for `plan` (see module docstring).
 
@@ -187,15 +233,23 @@ def make_executor(
     optional per-node compaction target (None = keep the buffer);
     compact_probe: per node, how many probes run before compacting (default
     all — compact after the node; smaller values compact mid-node so the
-    remaining probes run at the squeezed width). Returns
-    fn(rel_cols: {alias: {var: (N,) int32}}) ->
-      agg="count":  (count, ovf_expand, ovf_compact)
-      agg=None:     (bound, valid, mult, ovf_expand, ovf_compact)
-    where ovf_expand/ovf_compact are (num_executed_nodes,) bool vectors —
-    which node's buffer overflowed, for the adaptive runner.
+    remaining probes run at the squeezed width); schedule: the query's
+    StaticSchedule if the driver already computed it (None = walk the plan
+    here). Returns fn(rel_cols: {alias: {var: (N,) int32}}) ->
+      agg="count":  (count, need_expand, need_compact)
+      agg=None:     (bound, valid, mult, need_expand, need_compact)
+    where need_expand/need_compact are (num_executed_nodes,) int32 vectors
+    of required totals: need_expand[i] is the lane count node i's expansion
+    produced, need_compact[i] the live count at its compact point (0 when
+    the node doesn't expand/compact). Node i overflowed iff
+    need_expand[i] > capacities[i] (resp. need_compact[i] > compact_to[i]);
+    the need is the exact capacity the adaptive runner should jump to.
     """
     plan.validate()
-    schedule, level_ops = _static_schedule(plan)
+    if schedule is None:
+        schedule = _static_schedule(plan)
+    level_ops = schedule.level_ops
+    schedule = schedule.entries
     nsched = len(schedule)
     capacities = tuple(int(c) for c in capacities[:nsched])
     assert len(capacities) == nsched, "one capacity per executed node"
@@ -217,13 +271,13 @@ def make_executor(
         mult = jnp.ones(1, jnp.int32)  # int64 needs x64; counts < 2^31 here
         bound: dict[str, jnp.ndarray] = {}
         gid: dict[str, jnp.ndarray] = {}
-        ovf_expand = [jnp.zeros((), bool) for _ in range(nsched)]
-        ovf_compact = [jnp.zeros((), bool) for _ in range(nsched)]
+        need_expand = [jnp.zeros((), jnp.int32) for _ in range(nsched)]
+        need_compact = [jnp.zeros((), jnp.int32) for _ in range(nsched)]
 
         def squeeze(bound, gid, mult, valid, cap, c_compact, i):
             """Pack the valid lanes into a fresh c_compact-wide frontier."""
             src, live = ops.compact_indices(valid, c_compact, impl=impl)
-            ovf_compact[i] = live > c_compact
+            need_compact[i] = live
             srcc = jnp.clip(src, 0, cap - 1)
             bound = {v: a[srcc] for v, a in bound.items()}
             gid = {a: arr[srcc] for a, arr in gid.items()}
@@ -250,7 +304,7 @@ def make_executor(
                 base, counts = t.iter_counts(d, g, last)
                 counts = jnp.where(valid, counts, 0)
                 fr, member, vnew, total = ops.expand_counted(base, counts, c_next, impl=impl)
-                ovf_expand[i] = total > c_next
+                need_expand[i] = total
                 frc = jnp.clip(fr, 0, cap - 1)
                 memc = jnp.clip(member, 0, max(t.n - 1, 0))
                 bound = {v: a[frc] for v, a in bound.items()}
@@ -296,24 +350,49 @@ def make_executor(
             if c_compact is not None and not compacted and c_compact < cap:
                 # probe-less node (or unreached compact point): after-node
                 bound, gid, mult, valid, cap = squeeze(bound, gid, mult, valid, cap, c_compact, i)
-        oe = jnp.stack(ovf_expand) if nsched else jnp.zeros(0, bool)
-        oc = jnp.stack(ovf_compact) if nsched else jnp.zeros(0, bool)
+        ne = jnp.stack(need_expand) if nsched else jnp.zeros(0, jnp.int32)
+        nc = jnp.stack(need_compact) if nsched else jnp.zeros(0, jnp.int32)
         if agg == "count":
-            return jnp.sum(jnp.where(valid, mult, 0)), oe, oc
-        return bound, valid, mult, oe, oc
+            return jnp.sum(jnp.where(valid, mult, 0)), ne, nc
+        return bound, valid, mult, ne, nc
 
     return run
 
 
-def make_count_fn(plan: FreeJoinPlan, capacities: list[int], impl: str = "jnp", budget: int = 32):
+def overflows(cap_plan, need_expand, need_compact):
+    """Per-node overflow bits from the executor's reported needs and the
+    capacity plan the run used: (ovf_expand, ovf_compact) bool arrays."""
+    ne = np.asarray(need_expand)
+    nc = np.asarray(need_compact)
+    caps = np.asarray(cap_plan.capacities, np.int64)
+    cts = np.array(
+        [np.iinfo(np.int64).max if c is None else c for c in cap_plan.compact_to], np.int64
+    )
+    return ne > caps, nc > cts
+
+
+def make_count_fn(
+    plan: FreeJoinPlan,
+    capacities: list[int],
+    impl: str = "jnp",
+    budget: int = 32,
+    *,
+    schedule: StaticSchedule | None = None,
+):
     """Original count-only surface: fn(rel_cols) -> (count, overflowed).
-    One scalar overflow flag; no compaction (shard_map-friendly — see
-    core/distributed.py)."""
-    inner = make_executor(plan, capacities, impl=impl, budget=budget, agg="count")
+    One scalar overflow flag; no compaction. Kept for benchmarks and dry
+    runs — the SPMD driver (core/distributed.py) uses make_executor's need
+    vectors directly so its retry loop can grow the offending node."""
+    if schedule is None:
+        schedule = _static_schedule(plan)
+    inner = make_executor(plan, capacities, impl=impl, budget=budget, agg="count", schedule=schedule)
+    caps = jnp.asarray(
+        tuple(int(c) for c in capacities[: len(schedule)]) or (0,), jnp.int32
+    )
 
     def run(rel_cols):
-        count, oe, oc = inner(rel_cols)
-        return count, oe.any() | oc.any()
+        count, ne, nc = inner(rel_cols)
+        return count, (ne > caps[: ne.shape[0]]).any()
 
     return run
 
@@ -358,11 +437,13 @@ def relations_to_cols(plan: FreeJoinPlan, relations) -> dict[str, dict[str, jnp.
 class AdaptiveExecutor:
     """Overflow-retrying driver around make_executor (see module docstring).
 
-    Runs the executor for the current CapacityPlan; if any node reports
-    overflow, doubles exactly that node's capacity (or compaction target)
-    and re-runs. Compiled executors are cached per capacity vector and the
-    grown plan replaces the initial one, so a stream of similar queries
-    pays the retry + recompile once and then runs overflow-free.
+    Runs the executor for the current CapacityPlan; if any node reports a
+    need above its capacity, jumps exactly that node's capacity (or
+    compaction target) to the reported need and re-runs — one retry per
+    offending node, not a doubling ladder. Compiled executors are cached per
+    capacity vector and the grown plan replaces the initial one, so a stream
+    of similar queries pays the retry + recompile once and then runs
+    overflow-free.
     """
 
     def __init__(
@@ -379,6 +460,8 @@ class AdaptiveExecutor:
         plan.validate()
         self.plan = plan
         self.cap_plan = cap_plan
+        # reuse the schedule the planner already computed, if it rode along
+        self.schedule = getattr(cap_plan, "schedule", None) or _static_schedule(plan)
         self.impl = impl
         self.budget = budget
         self.agg = agg
@@ -403,6 +486,7 @@ class AdaptiveExecutor:
                 impl=self.impl,
                 budget=self.budget,
                 agg=self.agg,
+                schedule=self.schedule,
             )
             self._cache[key] = jax.jit(fn) if self.jit else fn
         return self._cache[key]
@@ -412,16 +496,17 @@ class AdaptiveExecutor:
         cp = self.cap_plan
         for _ in range(self.max_retries + 1):
             out = self._fn(cp)(rel_cols)
-            oe = np.asarray(out[-2])
-            oc = np.asarray(out[-1])
+            ne = np.asarray(out[-2])
+            nc = np.asarray(out[-1])
+            oe, oc = overflows(cp, ne, nc)
             if not (oe.any() or oc.any()):
                 self.cap_plan = cp  # steady state: keep the grown plan
                 result = out[:-2]
                 return result[0] if self.agg == "count" else result
             for i in np.flatnonzero(oc):
-                cp = cp.grow(int(i), compaction=True)
+                cp = cp.grow_to(int(i), int(nc[i]), compaction=True)
             for i in np.flatnonzero(oe):
-                cp = cp.grow(int(i))
+                cp = cp.grow_to(int(i), int(ne[i]))
             self.retries += 1
         raise RuntimeError(
             f"frontier overflow persists after {self.max_retries} retries: {cp}"

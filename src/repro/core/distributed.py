@@ -15,6 +15,19 @@ Two execution paths share the partitioning logic:
     the production mesh (see launch/dryrun.py); padded local fragments keep
     shapes static across devices.
 
+The SPMD path is driven by the same planning stack as the local compiled
+path (see core/compiled.py's shared-driver contract): spmd_count derives a
+CapacityPlan from capacity.plan_capacities over *per-shard* statistics —
+fragment sizes are the actual padded per-shard maxima and distinct counts
+shrink by the hypercube share of each variable — reusing the query's one
+Stats cache and one StaticSchedule. Inside the collective each device runs
+make_executor, which reports per-node *required totals*; the psum carries
+the count and a pmax carries the needs, and the overflow-retry loop runs on
+the host *outside* shard_map: grow exactly the offending node
+(CapacityPlan.grow_to), recompile at the new capacity vector, re-run. No
+overflow sentinel exists anywhere — spmd_count either returns the exact
+(non-negative) count or raises after max_retries.
+
 For acyclic queries hash partitioning on the first join key (shares
 concentrated on one variable) recovers the classic distributed hash join as
 a special case of the same code path.
@@ -22,7 +35,7 @@ a special case of the same code path.
 from __future__ import annotations
 
 import itertools
-from functools import partial
+from dataclasses import replace
 
 import numpy as np
 
@@ -30,7 +43,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import api, engine
-from repro.core.compiled import make_count_fn
+from repro.core.capacity import CapacityPlan, plan_capacities
+from repro.core.compiled import _static_schedule, make_executor, overflows
+from repro.core.optimizer import Stats
 from repro.core.plan import FreeJoinPlan
 from repro.relational.npkit import mix64
 from repro.relational.relation import Relation
@@ -67,6 +82,10 @@ def hypercube_shares(query: Query, sizes: dict[str, int], num_shards: int) -> di
         load = loads(assign)
         if load < best_load:
             best, best_load = assign, load
+    if best is None:
+        # no variables to split over (e.g. a zero-variable query): every
+        # shard gets the full input, the all-ones assignment
+        best = {v: 1 for v in vars_}
     return best
 
 
@@ -177,45 +196,189 @@ def _mask_pad(cols: dict[str, dict[str, jnp.ndarray]], counts: dict[str, jnp.nda
     return out
 
 
+class _ShardStats:
+    """Planner statistics for one hypercube shard, derived from the global
+    Stats cache without touching any column again: a fragment of R holds the
+    actual padded per-shard row maximum (known after partitioning), and a
+    variable sharded p_v ways keeps ~1/p_v of its distinct values."""
+
+    def __init__(self, base: Stats, shares: dict[str, int], sizes: dict[str, int]):
+        self.base = base
+        self.shares = shares
+        self.sizes = sizes
+
+    def size(self, alias: str) -> int:
+        return self.sizes[alias]
+
+    def distinct(self, alias: str, var: str) -> float:
+        return max(1.0, self.base.distinct(alias, var) / self.shares.get(var, 1))
+
+
+class SpmdCounter:
+    """AdaptiveExecutor's distributed sibling: partition once, then run the
+    shard_map'd compiled count with the host-side grow/retry loop outside
+    the collective. Compiled executors are cached per capacity vector and
+    the grown plan is kept, so repeated calls run overflow-free with no
+    recompiles (the steady-state surface the benchmarks measure)."""
+
+    def __init__(
+        self,
+        query: Query,
+        relations: dict[str, Relation],
+        plan: FreeJoinPlan,
+        capacities: list[int] | None = None,
+        mesh: jax.sharding.Mesh = None,
+        axis: str = "data",
+        impl: str = "jnp",
+        *,
+        cap_plan: CapacityPlan | None = None,
+        safety: float = 2.0,
+        max_retries: int = 12,
+    ):
+        num_shards = mesh.shape[axis]
+        stats = Stats(relations)
+        sizes = {a.alias: relations[a.alias].num_rows for a in query.atoms}
+        self.shares = hypercube_shares(query, sizes, num_shards)
+        shards = partition(query, relations, self.shares, num_shards)
+        dense, counts = pad_shards_to_dense(shards, query)
+        # reuse the schedule riding on a caller's plan (one walk per query)
+        self.schedule = getattr(cap_plan, "schedule", None) or _static_schedule(plan)
+        if cap_plan is not None:
+            # compaction stays off under shard_map; a reused local plan may
+            # carry targets — strip them so overflows() checks what ran
+            cap_plan = replace(cap_plan, compact_to=(None,) * len(cap_plan.capacities))
+        elif capacities is not None:
+            n = len(self.schedule)
+            cap_plan = CapacityPlan(
+                capacities=tuple(int(c) for c in capacities[:n]),
+                compact_to=(None,) * n,
+                schedule=self.schedule,
+            )
+        else:
+            # per-shard sizing: padded fragment maxima + share-shrunk
+            # distinct counts, same planner as the local path
+            frag_sizes = {
+                a: int(next(iter(cols.values())).shape[1]) for a, cols in dense.items()
+            }
+            cap_plan = plan_capacities(
+                plan,
+                stats=_ShardStats(stats, self.shares, frag_sizes),
+                schedule=self.schedule,
+                safety=safety,
+            )
+            cap_plan = replace(cap_plan, compact_to=(None,) * len(cap_plan.capacities))
+        self.plan = plan
+        self.cap_plan = cap_plan
+        self.mesh = mesh
+        self.axis = axis
+        self.impl = impl
+        self.max_retries = max_retries
+        self.retries = 0  # total overflow re-runs across calls
+        self._dense = jax.tree.map(jnp.asarray, dense)
+        self._counts = jax.tree.map(jnp.asarray, counts)
+        pspec = jax.sharding.PartitionSpec(axis)
+        self._in_specs = (
+            jax.tree.map(lambda _: pspec, self._dense),
+            jax.tree.map(lambda _: pspec, self._counts),
+        )
+        self._cache: dict[tuple, object] = {}
+
+    @property
+    def compiles(self) -> int:
+        return len(self._cache)
+
+    def _fn(self, cp: CapacityPlan):
+        if cp.capacities not in self._cache:
+            local = make_executor(
+                self.plan, cp.capacities, impl=self.impl, agg="count", schedule=self.schedule
+            )
+            axis, rspec = self.axis, jax.sharding.PartitionSpec()
+
+            def per_shard(cols, cnts):
+                cols = jax.tree.map(lambda x: x[0], cols)
+                cnts = jax.tree.map(lambda x: x[0], cnts)
+                cols = _mask_pad(cols, cnts)
+                c, ne, nc = local(cols)
+                # count by psum; needs by pmax — the host retry loop sizes
+                # every device's next capacities to the worst shard's need
+                return jax.lax.psum(c, axis), jax.lax.pmax(ne, axis), jax.lax.pmax(nc, axis)
+
+            self._cache[cp.capacities] = jax.jit(
+                shard_map(
+                    per_shard,
+                    mesh=self.mesh,
+                    in_specs=self._in_specs,
+                    out_specs=(rspec, rspec, rspec),
+                )
+            )
+        return self._cache[cp.capacities]
+
+    def __call__(self) -> int:
+        cp = self.cap_plan
+        for _ in range(self.max_retries + 1):
+            total, ne, nc = self._fn(cp)(self._dense, self._counts)
+            oe, oc = overflows(cp, ne, nc)
+            if not (oe.any() or oc.any()):
+                self.cap_plan = cp  # steady state: keep the grown plan
+                total = int(total)
+                assert total >= 0, f"spmd count must be non-negative, got {total}"
+                return total
+            ne, nc = np.asarray(ne), np.asarray(nc)
+            # compaction is off under shard_map today, but grow symmetrically
+            # with AdaptiveExecutor so the two retry loops cannot diverge
+            for i in np.flatnonzero(oc):
+                cp = cp.grow_to(int(i), int(nc[i]), compaction=True)
+            for i in np.flatnonzero(oe):
+                cp = cp.grow_to(int(i), int(ne[i]))
+            self.retries += 1
+        raise RuntimeError(
+            f"spmd frontier overflow persists after {self.max_retries} retries: {cp}"
+        )
+
+
 def spmd_count(
     query: Query,
     relations: dict[str, Relation],
     plan: FreeJoinPlan,
-    capacities: list[int],
-    mesh: jax.sharding.Mesh,
+    capacities: list[int] | None = None,
+    mesh: jax.sharding.Mesh = None,
     axis: str = "data",
     impl: str = "jnp",
-):
+    *,
+    cap_plan: CapacityPlan | None = None,
+    safety: float = 2.0,
+    max_retries: int = 12,
+    info: dict | None = None,
+) -> int:
     """End-to-end SPMD count: hypercube partition on the host, pad to dense,
-    shard over `axis`, run the compiled local engine per device, psum."""
-    num_shards = mesh.shape[axis]
-    sizes = {a.alias: relations[a.alias].num_rows for a in query.atoms}
-    shares = hypercube_shares(query, sizes, num_shards)
-    shards = partition(query, relations, shares, num_shards)
-    dense, counts = pad_shards_to_dense(shards, query)
-    local = make_count_fn(plan, capacities, impl=impl)
+    shard over `axis`, run the compiled local engine per device, psum.
 
-    def per_shard(cols, cnts):
-        cols = jax.tree.map(lambda x: x[0], cols)
-        cnts = jax.tree.map(lambda x: x[0], cnts)
-        cols = _mask_pad(cols, cnts)
-        c, ovf = local(cols)
-        c = jnp.where(ovf, -(2**30), c)
-        return jax.lax.psum(c, axis)
-
-    pspec = jax.sharding.PartitionSpec(axis)
-    dense_j = jax.tree.map(jnp.asarray, dense)
-    counts_j = jax.tree.map(jnp.asarray, counts)
-    fn = jax.jit(
-        shard_map(
-            per_shard,
-            mesh=mesh,
-            in_specs=(
-                jax.tree.map(lambda _: pspec, dense_j),
-                jax.tree.map(lambda _: pspec, counts_j),
-            ),
-            out_specs=jax.sharding.PartitionSpec(),
-        )
+    Capacities come from the shared planning stack (see module docstring):
+    by default a CapacityPlan over per-shard statistics; `capacities` (a
+    manual per-node list) or `cap_plan` override the initial plan. Overflow
+    is recovered by SpmdCounter's host-side retry loop — grow the offending
+    node to its reported need, recompile, re-run — so the returned count is
+    always exact and non-negative; no sentinel exists to leak. `info`, if
+    given, receives shares, the final capacity plan, and retry/compile
+    counters."""
+    counter = SpmdCounter(
+        query,
+        relations,
+        plan,
+        capacities,
+        mesh,
+        axis,
+        impl,
+        cap_plan=cap_plan,
+        safety=safety,
+        max_retries=max_retries,
     )
-    total = fn(dense_j, counts_j)
-    return int(total)
+    total = counter()
+    if info is not None:
+        info.update(
+            shares=counter.shares,
+            cap_plan=counter.cap_plan,
+            retries=counter.retries,
+            compiles=counter.compiles,
+        )
+    return total

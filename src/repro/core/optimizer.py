@@ -34,11 +34,33 @@ class Est:
         self.atoms = atoms
 
 
-def base_est(atom: Atom, rel: Relation, bad: bool = False) -> Est:
+class Stats:
+    """Per-column statistics shared across one query's whole planning pass
+    (optimize -> plan_capacities -> estimate_prefixes): each referenced
+    column is np.unique'd exactly once and the result cached. Holds a live
+    reference to the driver's relation dict, so stage relations materialized
+    mid-query are visible without rebuilding the cache."""
+
+    def __init__(self, relations: dict[str, Relation]):
+        self.relations = relations
+        self._distinct: dict[tuple[str, str], float] = {}
+
+    def size(self, alias: str) -> int:
+        return self.relations[alias].num_rows
+
+    def distinct(self, alias: str, var: str) -> float:
+        key = (alias, var)
+        if key not in self._distinct:
+            col = self.relations[alias].columns[var]
+            self._distinct[key] = float(max(1, len(np.unique(col))))
+        return self._distinct[key]
+
+
+def base_est(atom: Atom, stats: Stats, bad: bool = False) -> Est:
     if bad:
         return Est(1.0, {v: 1.0 for v in atom.vars}, [atom])
-    d = {v: float(max(1, len(np.unique(rel.columns[v])))) for v in atom.vars}
-    return Est(float(max(1, rel.num_rows)), d, [atom])
+    d = {v: stats.distinct(atom.alias, v) for v in atom.vars}
+    return Est(float(max(1, stats.size(atom.alias))), d, [atom])
 
 
 def join_est(a: Est, b: Est) -> Est:
@@ -54,8 +76,16 @@ def join_est(a: Est, b: Est) -> Est:
     return Est(card, d, a.atoms + b.atoms)
 
 
-def optimize(query: Query, relations: dict[str, Relation], bad: bool = False) -> BinaryPlan | Atom:
-    ests = [base_est(a, relations[a.alias], bad) for a in query.atoms]
+def optimize(
+    query: Query,
+    relations: dict[str, Relation],
+    bad: bool = False,
+    *,
+    stats: Stats | None = None,
+) -> BinaryPlan | Atom:
+    if stats is None:
+        stats = Stats(relations)
+    ests = [base_est(a, stats, bad) for a in query.atoms]
     if bad:
         # balanced bushy over input order (all estimates tie at 1)
         nodes: list = list(query.atoms)
@@ -121,7 +151,7 @@ class NodeEstimate:
     probe_after: tuple[float, ...] = ()
 
 
-def prefix_card(prefix: dict[str, tuple[str, ...]], relations, distinct) -> float:
+def prefix_card(prefix: dict[str, tuple[str, ...]], stats: Stats) -> float:
     """Estimated size of the join of each relation's consumed var-prefix.
 
     A depth-d trie level holds the distinct prefix combos, bounded by both
@@ -132,35 +162,43 @@ def prefix_card(prefix: dict[str, tuple[str, ...]], relations, distinct) -> floa
     for alias, vars_ in prefix.items():
         if not vars_:
             continue
-        d = {v: distinct[alias][v] for v in vars_}
-        card = min(float(max(1, relations[alias].num_rows)), float(np.prod(list(d.values()))))
+        d = {v: stats.distinct(alias, v) for v in vars_}
+        card = min(float(max(1, stats.size(alias))), float(np.prod(list(d.values()))))
         e = Est(card, d, [])
         cur = e if cur is None else join_est(cur, e)
     return 1.0 if cur is None else cur.card
 
 
 def estimate_prefixes(
-    plan: FreeJoinPlan, relations: dict[str, Relation]
+    plan: FreeJoinPlan,
+    relations: dict[str, Relation] | None = None,
+    *,
+    stats: Stats | None = None,
+    schedule=None,
 ) -> list[NodeEstimate]:
     """Walk the plan with the compiled path's static schedule (first-listed
     cover per node) and estimate the frontier size around every executed
-    node. One entry per executed node, aligned with the compiled schedule."""
+    node. One entry per executed node, aligned with the compiled schedule.
+
+    `stats` and `schedule` let the driver share one Stats cache and one
+    StaticSchedule across the whole planning pass; passing only `relations`
+    keeps the standalone surface working (stats built here)."""
     from repro.core.compiled import _static_schedule  # deferred: avoids a cycle
 
-    schedule, _ = _static_schedule(plan)
-    distinct = {
-        a: {v: float(max(1, len(np.unique(relations[a].columns[v])))) for v in relations[a].schema}
-        for a in {sa.alias for node in plan.nodes for sa in node}
-    }
-    prefix: dict[str, tuple[str, ...]] = {a: () for a in distinct}
+    if stats is None:
+        stats = Stats(relations)
+    if schedule is None:
+        schedule = _static_schedule(plan)
+    aliases = {sa.alias for node in plan.nodes for sa in node}
+    prefix: dict[str, tuple[str, ...]] = {a: () for a in aliases}
     out: list[NodeEstimate] = []
-    for k, cover, probes in schedule:
+    for k, cover, probes in schedule.entries:
         prefix[cover.alias] = prefix[cover.alias] + tuple(cover.vars)
-        expand = prefix_card(prefix, relations, distinct)
+        expand = prefix_card(prefix, stats)
         cards = []
         for sa in probes:
             prefix[sa.alias] = prefix[sa.alias] + tuple(sa.vars)
-            cards.append(min(prefix_card(prefix, relations, distinct), expand))
+            cards.append(min(prefix_card(prefix, stats), expand))
         after = cards[-1] if cards else expand
         out.append(
             NodeEstimate(node=k, expand=expand, after=after, probe_after=tuple(cards))

@@ -49,7 +49,9 @@ def lower_join(multi_pod: bool, rows_per_shard: int = 65536, cap: int = 1 << 20)
         def per_shard(cols):
             cols = jax.tree.map(lambda x: x[0], cols)
             c, ovf = local(cols)
-            return jax.lax.psum(jnp.where(ovf, -(2**30), c), axes)
+            # count + overflow flag psum'd separately: no sentinel can ever
+            # reach the caller (mirrors distributed.spmd_count's contract)
+            return jax.lax.psum(c, axes), jax.lax.psum(ovf.astype(jnp.int32), axes)
 
         cols_sds = {
             a.alias: {
@@ -65,7 +67,7 @@ def lower_join(multi_pod: bool, rows_per_shard: int = 65536, cap: int = 1 << 20)
                     per_shard,
                     mesh=mesh,
                     in_specs=(jax.tree.map(lambda _: spec, cols_sds),),
-                    out_specs=P(),
+                    out_specs=(P(), P()),
                 )
             )
             t0 = time.time()

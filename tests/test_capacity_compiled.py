@@ -75,13 +75,27 @@ def test_compiled_materialization_matches_oracle(rng):
     assert to_sorted_tuples((bound, mult), q.head) == join_oracle(q, rels)
 
 
-def test_compiled_empty_relation(rng):
-    # StaticTrie needs >= 1 row; the driver must short-circuit instead
+@pytest.mark.parametrize("empty_alias", ["R", "S", "T"])
+def test_compiled_empty_relation(rng, empty_alias):
+    # zero-row relations run through the executor natively: an empty trie's
+    # every frontier expansion yields zero live lanes (no host-side gate)
     q = triangle_query()
     rels = {a.alias: rand_rel(rng, a.alias, a.vars, 40, 8) for a in q.atoms}
-    rels["S"] = Relation("S", {"y": np.zeros(0, np.int64), "z": np.zeros(0, np.int64)})
-    assert compiled_free_join(q, rels, agg="count") == 0
+    vars_ = q.atom(empty_alias).vars
+    rels[empty_alias] = Relation(empty_alias, {v: np.zeros(0, np.int64) for v in vars_})
+    assert free_join(q, rels, agg="count", compiled=True) == 0
     bound, mult = compiled_free_join(q, rels, agg=None)
+    assert to_sorted_tuples((bound, mult), q.head) == []
+
+
+def test_compiled_all_relations_empty(rng):
+    q = triangle_query()
+    rels = {
+        a.alias: Relation(a.alias, {v: np.zeros(0, np.int64) for v in a.vars})
+        for a in q.atoms
+    }
+    assert free_join(q, rels, agg="count", compiled=True) == 0
+    bound, mult = free_join(q, rels, agg=None, compiled=True)
     assert to_sorted_tuples((bound, mult), q.head) == []
 
 
@@ -133,6 +147,9 @@ def test_overflow_retry_grows_only_offending_node(rng):
     assert ex.run_relations(rels) == free_join(q, rels, agg="count")
     assert ex.cap_plan.capacities[:-1] == good.capacities[:-1]
     assert ex.cap_plan.capacities[-1] > 128
+    # the executor reported the node's exact required total, so the runner
+    # jumps straight there: one retry, not a geometric doubling ladder
+    assert ex.retries == 1
 
 
 # ---- compaction ----------------------------------------------------------
@@ -176,7 +193,9 @@ def test_executor_with_forced_compaction_matches(rng):
     plain = jax.jit(make_executor(fj, caps))(cols)
     squeezed = jax.jit(make_executor(fj, caps, compact_to=[1024, None]))(cols)
     assert int(plain[0]) == want == int(squeezed[0])
-    assert not np.asarray(squeezed[1]).any() and not np.asarray(squeezed[2]).any()
+    # executors report *required totals* per node, not overflow bits
+    assert (np.asarray(squeezed[1]) <= np.array(caps)).all()
+    assert np.asarray(squeezed[2])[0] <= 1024
 
 
 def test_midnode_compaction_between_probes(rng):
@@ -201,7 +220,8 @@ def test_midnode_compaction_between_probes(rng):
         out = jax.jit(make_executor(fj, cp.capacities, compact_to=cp.compact_to,
                                     compact_probe=cpr))(cols)
         assert int(out[0]) == want
-        assert not np.asarray(out[1]).any() and not np.asarray(out[2]).any()
+        assert (np.asarray(out[1]) <= np.array(cp.capacities)).all()
+        assert np.asarray(out[2])[0] <= cp.compact_to[0]
     ex = AdaptiveExecutor(fj, cp, agg="count")
     assert ex.run_relations(rels) == want
 
@@ -214,7 +234,7 @@ def test_compaction_overflow_detected_and_recovered(rng):
     cp = CapacityPlan(capacities=(1024, 1024), compact_to=(16, None))
     cols = relations_to_cols(fj, rels)
     out = jax.jit(make_executor(fj, cp.capacities, compact_to=cp.compact_to))(cols)
-    assert np.asarray(out[2]).any(), "compaction overflow must be reported"
+    assert np.asarray(out[2])[0] > 16, "compaction overflow must be reported as the live need"
     ex = AdaptiveExecutor(fj, cp, agg="count")
     assert ex.run_relations(rels) == free_join(q, rels, agg="count")
     assert ex.retries > 0
@@ -249,6 +269,48 @@ def test_estimates_track_truth_within_order_of_magnitude(rng):
     truth = free_join(q, rels, agg="count")
     est = estimate_prefixes(fj, rels)[-1].after
     assert truth / 50 <= est <= truth * 50
+
+
+# ---- shared planning pass -------------------------------------------------
+
+
+def test_planning_pass_host_work(rng, monkeypatch):
+    """The driver computes one Stats cache and one StaticSchedule per query:
+    exactly one np.unique per referenced column (6 for the triangle) and one
+    _static_schedule call across optimize -> plan_capacities ->
+    estimate_prefixes -> make_executor."""
+    import repro.core.compiled as compiled_mod
+
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 40, 8) for a in q.atoms}
+    want = free_join(q, rels, agg="count")
+
+    uniq, sched = [0], [0]
+    orig_unique, orig_sched = np.unique, compiled_mod._static_schedule
+    monkeypatch.setattr(
+        np, "unique", lambda *a, **k: (uniq.__setitem__(0, uniq[0] + 1), orig_unique(*a, **k))[1]
+    )
+    monkeypatch.setattr(
+        compiled_mod,
+        "_static_schedule",
+        lambda p: (sched.__setitem__(0, sched[0] + 1), orig_sched(p))[1],
+    )
+    assert compiled_free_join(q, rels, agg="count") == want
+    assert uniq[0] == 6, f"one np.unique per column, got {uniq[0]}"
+    assert sched[0] == 1, f"one schedule computation per query, got {sched[0]}"
+
+
+def test_capacity_plan_carries_schedule(rng):
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 40, 8) for a in q.atoms}
+    fj = factor(binary2fj(q.atoms, q))
+    cp = plan_capacities(fj, rels)
+    assert cp.schedule is not None and len(cp.schedule) == len(cp.capacities)
+    ex = AdaptiveExecutor(fj, cp, agg="count")
+    assert ex.schedule is cp.schedule  # reused, not recomputed
+    # grow() / grow_to() keep the schedule on the derived plans
+    assert cp.grow(0).schedule is cp.schedule
+    assert cp.grow_to(0, 10**6).schedule is cp.schedule
 
 
 # ---- optimizer degenerate case (regression) ------------------------------

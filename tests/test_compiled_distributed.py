@@ -2,16 +2,32 @@
 import subprocess
 import sys
 
+import jax
 import numpy as np
 import pytest
 
-from repro.core import binary2fj, factor, gj_plan
+from repro.core import (
+    binary2fj,
+    compiled_free_join,
+    factor,
+    free_join,
+    gj_plan,
+    optimize,
+    to_sorted_tuples,
+)
 from repro.core.compiled import count_query
-from repro.core.distributed import distributed_join_host, hypercube_shares, partition
+from repro.core.distributed import (
+    distributed_join_host,
+    hypercube_shares,
+    partition,
+    spmd_count,
+)
+from repro.core.plan import BinaryPlan
 from repro.relational.oracle import join_oracle
 from repro.relational.relation import Relation
 from repro.relational.schema import Atom, Query, clover_query, triangle_query
 from tests.conftest import rand_rel
+from tests.test_capacity_compiled import four_cycle_query
 
 
 @pytest.mark.parametrize("seed", range(4))
@@ -59,6 +75,17 @@ def test_hypercube_shares_triangle_is_cube():
     assert sorted(shares.values()) == [2, 2, 2]
 
 
+def test_hypercube_shares_zero_variables():
+    # regression: no exponent combos exist for a zero-variable query; the
+    # all-ones assignment (every shard sees the whole input) must come back,
+    # not None
+    q = Query([Atom("R", ())])
+    assert hypercube_shares(q, {"R": 5}, 4) == {}
+    q2 = Query([Atom("R", ("x",)), Atom("S", ("x",))])
+    shares = hypercube_shares(q2, {"R": 10, "S": 10}, 1)
+    assert shares == {"x": 1}
+
+
 def test_partition_covers_every_output(rng):
     q = triangle_query()
     rels = {a.alias: rand_rel(rng, a.alias, a.vars, 60, 8) for a in q.atoms}
@@ -76,6 +103,70 @@ def test_distributed_materialized(rng):
     assert [tuple(map(int, t)) for t in got] == want
 
 
+def test_eager_compiled_distributed_agree_on_bushy_plan(rng):
+    """Sec 5.4 regime: the hijacked optimizer emits a bushy balanced tree.
+    All three execution paradigms must agree on it — the unified planning
+    driver serves the compiled path's stages too."""
+    q = four_cycle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 50, 6) for a in q.atoms}
+    bushy = optimize(q, rels, bad=True)
+    assert isinstance(bushy, BinaryPlan) and isinstance(bushy.right, BinaryPlan)
+    want = len(join_oracle(q, rels))
+    assert free_join(q, rels, bushy, agg="count") == want
+    assert compiled_free_join(q, rels, bushy, agg="count") == want
+    assert distributed_join_host(q, rels, num_shards=4, plan_tree=bushy, agg="count") == want
+    bound, mult = compiled_free_join(q, rels, bushy, agg=None)
+    assert to_sorted_tuples((bound, mult), q.head) == join_oracle(q, rels)
+
+
+# ---------------------------------------------------------------------------
+# SPMD driver: planner-derived capacities + host-side overflow retry.
+# A 1-shard mesh exercises the whole shard_map + psum + retry machinery on
+# the single CPU device; the 8-device variant runs in the slow subprocess
+# test below.
+# ---------------------------------------------------------------------------
+
+
+def test_spmd_count_planner_capacities(rng):
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 80, 10) for a in q.atoms}
+    want = len(join_oracle(q, rels))
+    mesh = jax.make_mesh((1,), ("data",))
+    fj = factor(binary2fj(q.atoms, q))
+    info = {}
+    got = spmd_count(q, rels, fj, None, mesh, info=info)
+    assert got == want
+    assert info["retries"] == 0, "planner capacities should not overflow here"
+    assert info["cap_plan"].schedule is not None
+
+
+def test_spmd_overflow_retry_exact_count(rng):
+    """An undersized initial plan must never leak a sentinel: the retry loop
+    outside the collective grows the offending node to its reported need and
+    the exact (non-negative) count comes back."""
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 80, 10) for a in q.atoms}
+    want = free_join(q, rels, agg="count")
+    mesh = jax.make_mesh((1,), ("data",))
+    fj = factor(binary2fj(q.atoms, q))
+    info = {}
+    got = spmd_count(q, rels, fj, [16] * 4, mesh, info=info)
+    assert got == want and got >= 0
+    assert info["retries"] >= 1
+    assert max(info["cap_plan"].capacities) > 16
+    # need-based growth: a couple of retries at most, not a doubling ladder
+    assert info["retries"] <= len(info["cap_plan"].capacities)
+
+
+def test_spmd_count_empty_relation(rng):
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 40, 8) for a in q.atoms}
+    rels["S"] = Relation("S", {"y": np.zeros(0, np.int64), "z": np.zeros(0, np.int64)})
+    mesh = jax.make_mesh((1,), ("data",))
+    fj = factor(binary2fj(q.atoms, q))
+    assert spmd_count(q, rels, fj, None, mesh) == 0
+
+
 SPMD_SCRIPT = r"""
 import numpy as np, jax
 from repro.relational.schema import triangle_query
@@ -89,8 +180,16 @@ rels = {a.alias: Relation(a.alias, {v: rng.integers(0, 12, 120) for v in a.vars}
 want = len(join_oracle(q, rels))
 mesh = jax.make_mesh((8,), ("data",))
 fj = factor(binary2fj(q.atoms, q))
-got = spmd_count(q, rels, fj, [8192] * 4, mesh)
+got = spmd_count(q, rels, fj, [8192] * 4, mesh)  # manual capacities
 assert got == want, (got, want)
+info = {}
+got = spmd_count(q, rels, fj, None, mesh, info=info)  # planner capacities
+assert got == want, (got, want)
+assert info["retries"] == 0, info
+info = {}
+got = spmd_count(q, rels, fj, [32] * 4, mesh, info=info)  # undersized: retry, no sentinel
+assert got == want and got >= 0, (got, want)
+assert info["retries"] >= 1, info
 print("SPMD_OK", got)
 """
 
