@@ -41,7 +41,8 @@ def run(scale: float = 0.1, repeats: int = 2):
                 "name": f"colt.{name}",
                 "us": times["colt"][0] * 1e6,
                 "derived": f"slt/colt={speed_slt[-1]:.2f}x;simple/colt={speed_simple[-1]:.2f}x"
-                f";build_ms(colt/slt/simple)={times['colt'][2]:.1f}/{times['slt'][2]:.1f}/{times['simple'][2]:.1f}",
+                f";build_ms(colt/slt/simple)={times['colt'][2]:.1f}"
+                f"/{times['slt'][2]:.1f}/{times['simple'][2]:.1f}",
             }
         )
     gm = lambda v: float(np.exp(np.mean(np.log(v))))  # noqa: E731

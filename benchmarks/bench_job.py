@@ -18,7 +18,9 @@ def run(scale: float = 0.1, repeats: int = 2):
         tree = optimize(q, rels)
         t_fj, out_fj = timeit(lambda: free_join(q, rels, tree, agg="count"), repeats, warmup=0)
         t_bj, out_bj = timeit(lambda: binary_join(q, rels, tree, agg="count"), repeats, warmup=0)
-        t_gj, out_gj = timeit(lambda: generic_join(q, rels, plan_tree=tree, agg="count"), repeats, warmup=0)
+        t_gj, out_gj = timeit(
+            lambda: generic_join(q, rels, plan_tree=tree, agg="count"), repeats, warmup=0
+        )
         assert out_fj == out_bj == out_gj, (name, out_fj, out_bj, out_gj)
         speed_bj.append(t_bj / t_fj)
         speed_gj.append(t_gj / t_fj)

@@ -25,6 +25,11 @@ Part 3 — the compiled-distributed path on the same star query: SpmdCounter
 2- and 4-shard mesh of fake CPU devices. Runs in a subprocess so the forced
 device count never leaks into this process's jax backend.
 
+Part 4 — bushy plans (PR 4): a three-stage bushy tree over a six-relation
+path query, eager vs the PR 3 hybrid (non-root stages on the eager host
+engine per call, root compiled) vs the fully-compiled chain (every stage
+on device inside one AdaptiveExecutor call).
+
 The rows also land in BENCH_join_perf.json (repo root) so the perf
 trajectory of the compiled path is tracked PR-over-PR.
 """
@@ -41,6 +46,7 @@ from benchmarks.common import timeit
 from repro.core import binary2fj, factor, free_join
 from repro.core.capacity import plan_capacities
 from repro.core.compiled import AdaptiveExecutor, make_count_fn, relations_to_cols
+from repro.core.plan import BinaryPlan
 from repro.relational.relation import Relation
 from repro.relational.schema import Atom, Query, triangle_query
 
@@ -128,10 +134,13 @@ def run(repeats: int = 3, smoke: bool = False):
                  "derived": f"speedup_vs_J0={t0 / t3:.2f}x"})
     rows.extend(run_compiled_vs_eager(repeats=repeats, smoke=smoke))
     rows.extend(run_distributed(repeats=repeats, smoke=smoke))
+    rows.extend(run_bushy(repeats=repeats, smoke=smoke))
     return rows
 
 
-def run_compiled_vs_eager(repeats: int = 3, smoke: bool = False, path: str = "BENCH_join_perf.json"):
+def run_compiled_vs_eager(
+    repeats: int = 3, smoke: bool = False, path: str = "BENCH_join_perf.json"
+):
     """Eager vs planned-compiled (with/without compaction) on the
     low-selectivity star query; writes the BENCH_join_perf.json perf record
     (full runs only — smoke numbers don't overwrite the trajectory)."""
@@ -168,6 +177,122 @@ def run_compiled_vs_eager(repeats: int = 3, smoke: bool = False, path: str = "BE
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")
+    return rows
+
+
+def _bushy_data(n=600_000, dom=30_000, sel=0.02, seed=0):
+    """Bushy tree (A ⋈ B) ⋈ ((R ⋈ S) ⋈ T): the non-root stage is the
+    low-selectivity star of _lowsel_data (S covers a `sel` fraction of the
+    y domain, so ~98% of the stage frontier dies at the S probe) — the
+    regime where the compiled path beats the eager engine. The hybrid
+    re-runs that star on the eager engine (COLT builds + host
+    materialization) every call; the chain runs it compiled, with the
+    output buffer squeezed by the planner's compact_output point."""
+    rng = np.random.default_rng(seed)
+    atoms = [
+        Atom("A", ("u", "v")),
+        Atom("B", ("v", "x")),
+        Atom("R", ("x", "y")),
+        Atom("S", ("y", "a")),
+        Atom("T", ("y", "b")),
+    ]
+    q = Query(atoms)
+    tree = BinaryPlan(
+        BinaryPlan(atoms[0], atoms[1]),
+        BinaryPlan(BinaryPlan(atoms[2], atoms[3]), atoms[4]),
+    )
+    ny = max(1, int(dom * sel))
+    y_live = rng.choice(dom, ny, replace=False)
+    m = n // 15
+    rels = {
+        "A": Relation("A", {"u": rng.integers(0, dom, m), "v": rng.integers(0, dom, m)}),
+        "B": Relation("B", {"v": rng.integers(0, dom, m), "x": rng.integers(0, dom, m)}),
+        "R": Relation("R", {"x": rng.integers(0, dom, n), "y": rng.integers(0, dom, n)}),
+        "S": Relation("S", {"y": y_live[rng.integers(0, ny, ny)], "a": rng.integers(0, dom, ny)}),
+        "T": Relation(
+            "T", {"y": rng.integers(0, dom, n // 10), "b": rng.integers(0, dom, n // 10)}
+        ),
+    }
+    return q, tree, rels
+
+
+def run_bushy(repeats: int = 3, smoke: bool = False, path: str = "BENCH_join_perf.json"):
+    """Part 4: eager vs PR 3 hybrid vs fully-compiled chain on a bushy plan.
+    Steady state for both compiled variants (runners built once, compile
+    excluded); the hybrid re-runs its eager non-root stages every call —
+    that is exactly the per-query cost the chain removes. Full runs append
+    bushy_* fields to the BENCH_join_perf.json record."""
+    from repro.core import compiled_free_join, engine
+    from repro.core.api import _stage_plans, _trie_modes
+
+    q, tree, rels = _bushy_data(n=30_000, dom=3_000) if smoke else _bushy_data()
+    stages = _stage_plans(q, tree)
+    assert len(stages) == 2, "the tree must decompose into stage + root"
+
+    # PR 3 hybrid: cached compiled root, eager stages re-run per call
+    info_h = {}
+    ch = compiled_free_join(q, rels, tree, agg="count", chain_stages=False, info=info_h)
+    hybrid_runner = info_h["runner"]
+
+    def hybrid_once():
+        rels2 = dict(rels)
+        for name, fj in stages[:-1]:
+            bound, mult = engine.execute(fj, rels2, mode=_trie_modes(fj, "colt"), agg=None)
+            rels2[name] = Relation(name, engine.materialize(bound, mult, fj.query.head))
+        return hybrid_runner.run_relations(rels2)
+
+    # fully-compiled chain: one on-device program for every stage
+    info_c = {}
+    cc = compiled_free_join(q, rels, tree, agg="count", info=info_c)
+    chain_runner = info_c["runner"]
+
+    # interleaved best-of-N: the three paths alternate inside each round so
+    # machine drift (frequency scaling, allocator state) hits them equally
+    # — sequential per-path timing swings the comparison by 30% run to run
+    paths = [
+        lambda: free_join(q, rels, tree, agg="count"),
+        hybrid_once,
+        lambda: chain_runner.run_relations(rels),
+    ]
+    counts = [fn() for fn in paths]  # warmup
+    best = [float("inf")] * 3
+    for _ in range(max(3, repeats)):
+        for i, fn in enumerate(paths):
+            t0 = time.perf_counter()
+            counts[i] = fn()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    te, th, tc = best
+    ce, ch2, cc2 = counts
+    assert ce == ch == ch2 == cc == cc2, (ce, ch, ch2, cc, cc2)
+
+    rows = [
+        {"name": "joinperf.bushy_eager", "us": te * 1e6, "derived": f"count={ce}"},
+        {"name": "joinperf.bushy_hybrid", "us": th * 1e6,
+         "derived": f"speedup_vs_eager={te / th:.2f}x"},
+        {"name": "joinperf.bushy_chained", "us": tc * 1e6,
+         "derived": f"speedup_vs_hybrid={th / tc:.2f}x;plan={info_c['cap_plan']}"},
+    ]
+    if smoke:
+        return rows
+    record = {
+        "bushy_query": "(A join B) join lowsel-star(R,S,T), 2% S selectivity",
+        "bushy_count": ce,
+        "bushy_eager_us": te * 1e6,
+        "bushy_hybrid_us": th * 1e6,
+        "bushy_chained_us": tc * 1e6,
+        "bushy_chained_speedup_vs_hybrid": th / tc,
+        "bushy_chain_plan": str(info_c["cap_plan"]),
+        "bushy_retries": info_c["retries"],
+    }
+    import os
+
+    if os.path.exists(path):
+        with open(path) as f:
+            full = json.load(f)
+        full.update(record)
+        with open(path, "w") as f:
+            json.dump(full, f, indent=2)
+            f.write("\n")
     return rows
 
 

@@ -21,7 +21,10 @@ def run(repeats: int = 5):
         table = ops.build_table(jnp.asarray(keys))
         queries = jnp.asarray(
             np.vstack(
-                [keys[rng.integers(0, n, q // 2)], rng.integers(2**30, 2**31 - 1, (q // 2, 2)).astype(np.int32)]
+                [
+                    keys[rng.integers(0, n, q // 2)],
+                    rng.integers(2**30, 2**31 - 1, (q // 2, 2)).astype(np.int32),
+                ]
             )
         )
         probe = jax.jit(lambda t, qq: ops.probe(t, qq))
@@ -36,14 +39,20 @@ def run(repeats: int = 5):
         )
         tb, _ = timeit(lambda: jax.block_until_ready(ops.build_table(jnp.asarray(keys))), repeats)
         rows.append(
-            {"name": f"kern.build_table.n{n}", "us": tb * 1e6, "derived": f"{n / tb / 1e6:.1f}Mkey/s"}
+            {
+                "name": f"kern.build_table.n{n}",
+                "us": tb * 1e6,
+                "derived": f"{n / tb / 1e6:.1f}Mkey/s",
+            }
         )
     a = jnp.asarray(np.sort(rng.integers(0, 2**30, 100_000).astype(np.int32)))
     b = jnp.asarray(np.sort(np.unique(rng.integers(0, 2**30, 100_000).astype(np.int32))))
     isect = jax.jit(lambda x, y: ops.intersect_sorted(x, y))
     jax.block_until_ready(isect(a, b))
     t, _ = timeit(lambda: jax.block_until_ready(isect(a, b)), repeats)
-    rows.append({"name": "kern.intersect.100k", "us": t * 1e6, "derived": f"{len(a) / t / 1e6:.1f}Mkey/s"})
+    rows.append(
+        {"name": "kern.intersect.100k", "us": t * 1e6, "derived": f"{len(a) / t / 1e6:.1f}Mkey/s"}
+    )
 
     # compiled static engine vs eager engine (triangle count)
     from repro.core import binary2fj, factor, free_join

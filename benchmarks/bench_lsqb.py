@@ -29,8 +29,12 @@ def run(sfs=(0.03, 0.1, 0.3), repeats: int = 2):
                     "derived": f"count={c_fj};bj/fj={t_bj / t_fj:.2f}x;gj/fj={t_gj / t_fj:.2f}x",
                 }
             )
-            rows.append({"name": f"lsqb.{name}.sf{sf}.binary_join", "us": t_bj * 1e6, "derived": ""})
-            rows.append({"name": f"lsqb.{name}.sf{sf}.generic_join", "us": t_gj * 1e6, "derived": ""})
+            rows.append(
+                {"name": f"lsqb.{name}.sf{sf}.binary_join", "us": t_bj * 1e6, "derived": ""}
+            )
+            rows.append(
+                {"name": f"lsqb.{name}.sf{sf}.generic_join", "us": t_gj * 1e6, "derived": ""}
+            )
     # Fig. 19: factorized output. LSQB q1's output >> input; the paper made
     # it "significantly faster" by keeping the output factorized. Our
     # permuted-skew q1 has a tiny count, so we isolate the same effect on
@@ -65,7 +69,8 @@ def run(sfs=(0.03, 0.1, 0.3), repeats: int = 2):
         {
             "name": "lsqb.2hop.fig19_factorized_output",
             "us": t_fact * 1e6,
-            "derived": f"count={c1};materialized_us={t_mat * 1e6:.0f};speedup={t_mat / t_fact:.2f}x",
+            "derived": f"count={c1};materialized_us={t_mat * 1e6:.0f}"
+            f";speedup={t_mat / t_fact:.2f}x",
         }
     )
     return rows

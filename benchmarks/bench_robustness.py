@@ -41,7 +41,12 @@ def run(scale: float = 0.05, repeats: int = 1):
                 "derived": ";".join(
                     f"{lbl}_bad/good={tb / tg:.2f}x" for lbl, (tg, tb) in res.items()
                 )
-                + f";fastest_bad={'fj' if res['fj'][1] <= min(res['bj'][1], res['gj'][1]) else ('bj' if res['bj'][1] < res['gj'][1] else 'gj')}",
+                + ";fastest_bad="
+                + (
+                    "fj"
+                    if res["fj"][1] <= min(res["bj"][1], res["gj"][1])
+                    else ("bj" if res["bj"][1] < res["gj"][1] else "gj")
+                ),
             }
         )
     gm = lambda v: float(np.exp(np.mean(np.log(v))))  # noqa: E731

@@ -90,7 +90,8 @@ def job_tables(scale: float = 1.0, seed: int = 0) -> dict[str, Relation]:
         {"c": np.arange(n_company, dtype=np.int64), "country": rng.integers(0, 50, n_company)},
     )
     keyword = Relation(
-        "keyword", {"k": np.arange(n_keyword, dtype=np.int64), "kw_type": rng.integers(0, 5, n_keyword)}
+        "keyword",
+        {"k": np.arange(n_keyword, dtype=np.int64), "kw_type": rng.integers(0, 5, n_keyword)},
     )
     return {
         "title": title,
@@ -133,7 +134,9 @@ def job_queries(tables: dict[str, Relation]):
         "cast_info": ci,
         "person": person,
     }
-    rels["title"] = Relation("title", {"t": rels["title"].columns["t"], "kind": rels["title"].columns["kind"]})
+    rels["title"] = Relation(
+        "title", {"t": rels["title"].columns["t"], "kind": rels["title"].columns["kind"]}
+    )
     out.append(("q_chain3", q, rels))
 
     # q_star4_m2m (Q13a-like): 3 many-to-many joins on t + a selective
@@ -203,7 +206,11 @@ def job_queries(tables: dict[str, Relation]):
         ]
     )
     rels = {
-        "title": _sel(Relation("title", {"t": t.columns["t"], "kind": t.columns["kind"]}), "kind", lambda k: k == 1),
+        "title": _sel(
+            Relation("title", {"t": t.columns["t"], "kind": t.columns["kind"]}),
+            "kind",
+            lambda k: k == 1,
+        ),
         "cast_info": Relation("cast_info", {"t": ci.columns["t"], "p": ci.columns["p"]}),
         "movie_keyword": mk,
         "movie_companies": mc,
@@ -257,7 +264,13 @@ def lsqb_queries(tables: dict[str, Relation]):
     k_ab = knows
     out = []
     # q1: triangle (cyclic)
-    q = Query([Atom("knows", ("a", "b"), "K1"), Atom("knows", ("b", "c"), "K2"), Atom("knows", ("c", "a"), "K3")])
+    q = Query(
+        [
+            Atom("knows", ("a", "b"), "K1"),
+            Atom("knows", ("b", "c"), "K2"),
+            Atom("knows", ("c", "a"), "K3"),
+        ]
+    )
     rels = {
         "K1": k_ab,
         "K2": k_ab.rename({"a": "b", "b": "c"}),

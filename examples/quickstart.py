@@ -53,9 +53,15 @@ def main():
     ar = np.arange(n, dtype=np.int64)
     qc = clover_query()
     rels = {
-        "R": Relation("R", {"x": np.r_[0, np.full(n, 1), np.full(n, 2)], "a": np.r_[0, ar, ar + n]}),
-        "S": Relation("S", {"x": np.r_[0, np.full(n, 2), np.full(n, 3)], "b": np.r_[0, ar, ar + n]}),
-        "T": Relation("T", {"x": np.r_[0, np.full(n, 3), np.full(n, 1)], "c": np.r_[0, ar, ar + n]}),
+        "R": Relation(
+            "R", {"x": np.r_[0, np.full(n, 1), np.full(n, 2)], "a": np.r_[0, ar, ar + n]}
+        ),
+        "S": Relation(
+            "S", {"x": np.r_[0, np.full(n, 2), np.full(n, 3)], "b": np.r_[0, ar, ar + n]}
+        ),
+        "T": Relation(
+            "T", {"x": np.r_[0, np.full(n, 3), np.full(n, 1)], "c": np.r_[0, ar, ar + n]}
+        ),
     }
     tree = optimize(qc, rels)
     print("\nclover (adversarial skew, n =", n, ")")
@@ -91,6 +97,36 @@ def main():
     print(f"warm rerun  : count={c2}  ({(t3 - t2) * 1e3:.1f} ms)")
     print(f"plan        : {info['cap_plan']}  retries={info['retries']}")
     assert c == c2 == free_join(q, rels, agg="count")
+
+    # bushy plans, fully compiled: a binary plan tree with a join on its
+    # right side decomposes into stages (Sec 2.2). The compiled path runs
+    # the WHOLE chain as one on-device program — each non-root stage's
+    # output stays on the device as a padded, multiplicity-weighted buffer
+    # that the next stage builds its trie from; the eager engine is never
+    # invoked. Per-stage capacities come from estimated stage statistics
+    # and any stage's overflow grows exactly the offending buffer.
+    from repro.core.plan import BinaryPlan
+    from repro.relational.schema import Atom, Query
+
+    qb = Query(
+        [Atom("A", ("x", "y")), Atom("B", ("y", "z")), Atom("C", ("z", "w")), Atom("D", ("w", "u"))]
+    )
+    relsb = {
+        a.alias: Relation(a.alias, {v: rng.integers(0, 500, 1500) for v in a.vars})
+        for a in qb.atoms
+    }
+    # (A ⋈ B) ⋈ (C ⋈ D): the right subtree becomes a materialized stage
+    bushy = BinaryPlan(
+        BinaryPlan(qb.atoms[0], qb.atoms[1]), BinaryPlan(qb.atoms[2], qb.atoms[3])
+    )
+    print("\nbushy plan, fully compiled (stage chained on device)")
+    info = {}
+    t0 = time.perf_counter()
+    cb = compiled_free_join(qb, relsb, bushy, agg="count", info=info)
+    t1 = time.perf_counter()
+    print(f"chained     : count={cb}  ({(t1 - t0) * 1e3:.1f} ms incl. compile)")
+    print(f"chain plan  : {info['cap_plan']}")
+    assert cb == free_join(qb, relsb, bushy, agg="count")
 
 
 if __name__ == "__main__":

@@ -9,9 +9,15 @@ from repro.core.api import (
     generic_join,
     to_sorted_tuples,
 )
-from repro.core.capacity import CapacityPlan, agm_bound, plan_capacities
+from repro.core.capacity import (
+    CapacityPlan,
+    ChainCapacityPlan,
+    agm_bound,
+    plan_capacities,
+    plan_chain_capacities,
+)
 from repro.core.colt import Colt
-from repro.core.compiled import AdaptiveExecutor, StaticSchedule
+from repro.core.compiled import AdaptiveExecutor, StaticSchedule, make_chain_executor
 from repro.core.engine import ExecStats, execute, materialize
 from repro.core.optimizer import Est, Stats, estimate_prefixes, optimize
 from repro.core.plan import (
@@ -28,6 +34,7 @@ from repro.core.plan import (
 __all__ = [
     "AdaptiveExecutor",
     "CapacityPlan",
+    "ChainCapacityPlan",
     "Est",
     "Stats",
     "StaticSchedule",
@@ -36,7 +43,9 @@ __all__ = [
     "compiled_free_join",
     "estimate_prefixes",
     "free_join",
+    "make_chain_executor",
     "plan_capacities",
+    "plan_chain_capacities",
     "generic_join",
     "to_sorted_tuples",
     "Colt",

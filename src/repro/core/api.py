@@ -1,16 +1,24 @@
 """Top-level drivers: Free Join, Generic Join, and binary hash join.
 
 Each driver takes a query, relations, and a binary plan (tree). Bushy plans
-are decomposed into left-deep stages (Sec 2.2); every non-root stage is
-materialized into a fresh relation before its parent runs — the paper's
-(intentionally simple) materialization strategy.
+are decomposed into left-deep stages (Sec 2.2). The eager drivers
+materialize every non-root stage into a fresh host relation before its
+parent runs — the paper's (intentionally simple) materialization strategy.
 
-`free_join(compiled=True)` (or `compiled_free_join`) routes the root stage
-through the static-shape executor instead: query -> cost-based binary plan
--> binary2fj -> factor -> capacity.plan_capacities -> compiled.
-AdaptiveExecutor. No manual capacities — buffer sizes come from the
-optimizer's estimates capped by the AGM bound, and overflow is recovered by
-per-node geometric growth.
+`free_join(compiled=True)` (or `compiled_free_join`) instead runs the
+*whole* stage chain as one on-device program: query -> cost-based binary
+plan -> per-stage binary2fj + factor -> capacity.plan_chain_capacities ->
+one compiled.AdaptiveExecutor call. Non-root stages execute with the same
+static-shape executor as the root (agg=None), their output columns stay on
+device as padded/mult-weighted buffers, and the next stage builds its trie
+straight from that buffer — no host round-trips, no eager engine anywhere
+in the compiled path. No manual capacities — per-stage buffer sizes come
+from the optimizer's estimates (stage output estimates feeding downstream
+stages) capped by the AGM bound, and any stage's overflow is recovered by
+growing exactly the offending node and re-running the chain.
+
+`chain_stages=False` keeps the previous hybrid (non-root stages eager on
+the host, root compiled) as a reference/benchmark baseline.
 """
 from __future__ import annotations
 
@@ -48,6 +56,24 @@ def _decompose(plan_tree: BinaryPlan | Atom):
     return plan_tree.decompose()
 
 
+def _stage_plans(query: Query, plan_tree, *, factorize: bool = True):
+    """Per-stage Free Join plans of a (possibly bushy) binary plan tree:
+    [(name, fj_plan)], root last. Each stage's plan is built over its own
+    sub-query (fj.query), whose head is the stage's output schema; later
+    stages reference earlier ones by name as ordinary atoms."""
+    stage_schemas: dict[str, tuple[str, ...]] = {}
+    out = []
+    for name, leaves in _decompose(plan_tree):
+        atoms = _stage_atoms(leaves, query, stage_schemas)
+        sub_q = Query(atoms)
+        fj = binary2fj(atoms, sub_q)
+        if factorize:
+            fj = factor(fj)
+        stage_schemas[name] = sub_q.head
+        out.append((name, fj))
+    return out
+
+
 def _run_stages(
     query: Query,
     relations: dict[str, Relation],
@@ -59,16 +85,13 @@ def _run_stages(
     agg,
     stats: engine.ExecStats | None,
 ):
+    """Eager stage driver: every stage runs on the numpy engine, non-root
+    stage outputs are materialized into fresh host relations. The compiled
+    driver (compiled_free_join) shares _stage_plans but routes *all* stages
+    through the static-shape executor instead."""
     rels = dict(relations)
-    stage_schemas: dict[str, tuple[str, ...]] = {}
-    stages = _decompose(plan_tree)
     result = None
-    for name, leaves in stages:
-        atoms = _stage_atoms(leaves, query, stage_schemas)
-        sub_q = Query(atoms)
-        fj = binary2fj(atoms, sub_q)
-        if factorize:
-            fj = factor(fj)
+    for name, fj in _stage_plans(query, plan_tree, factorize=factorize):
         modes = _trie_modes(fj, fj_mode)
         is_root = name == "__root"
         out = engine.execute(
@@ -83,9 +106,8 @@ def _run_stages(
             result = out
         else:
             bound, mult = out
-            cols = engine.materialize(bound, mult, sub_q.head)
+            cols = engine.materialize(bound, mult, fj.query.head)
             rels[name] = Relation(name, cols)
-            stage_schemas[name] = sub_q.head
     return result
 
 
@@ -149,45 +171,51 @@ def compiled_free_join(
     compact_threshold: float = 0.25,
     jit: bool = True,
     info: dict | None = None,
+    chain_stages: bool = True,
 ):
     """Compiled driver, no manual capacities (see module docstring).
 
     One planning pass serves the whole query: a single optimizer.Stats cache
-    (one np.unique per referenced column) feeds optimize and
-    plan_capacities, and the StaticSchedule computed by the planner rides on
-    the CapacityPlan into every executor build. Zero-row inputs run through
-    the executor natively (an empty relation is a trie whose every frontier
-    expansion yields zero live lanes) — no host-side gate.
+    (one np.unique per referenced base column) feeds optimize and
+    plan_chain_capacities, and the StaticSchedule computed per stage rides
+    on its CapacityPlan into every executor build. Zero-row inputs run
+    through the executor natively (an empty relation is a trie whose every
+    frontier expansion yields zero live lanes) — no host-side gate.
 
-    Non-root stages of a bushy plan are materialized eagerly; the root stage
-    runs on compiled.AdaptiveExecutor sized by capacity.plan_capacities.
-    Returns the eager contract: a count for agg="count", else (bound, mult)
-    over live rows. `info`, if given, receives the runner, capacity plan,
-    and retry counters for inspection."""
-    from repro.core.capacity import plan_capacities
+    Every stage of a bushy plan — not just the root — runs on the
+    static-shape executor, chained on device inside one
+    compiled.AdaptiveExecutor call (see compiled.make_chain_executor);
+    `chain_stages=False` restores the previous hybrid (non-root stages on
+    the eager host engine) as a reference baseline. Returns the eager
+    contract: a count for agg="count", else (bound, mult) over live rows.
+    `info`, if given, receives the runner, capacity plan, and retry
+    counters for inspection."""
+    from repro.core.capacity import plan_chain_capacities
     from repro.core.compiled import AdaptiveExecutor
 
     rels = dict(relations)
-    stats = Stats(rels)  # live view: sees stage relations as they land
+    stats = Stats(rels)  # live view: sees hybrid stage relations as they land
     if plan_tree is None:
         plan_tree = optimize(query, rels, stats=stats)
-    stage_schemas: dict[str, tuple[str, ...]] = {}
-    stages = _decompose(plan_tree)
-    for name, leaves in stages[:-1]:  # non-root stages: eager materialization
-        atoms = _stage_atoms(leaves, query, stage_schemas)
-        sub_q = Query(atoms)
-        fj = factor(binary2fj(atoms, sub_q))
-        bound, mult = engine.execute(fj, rels, mode=_trie_modes(fj, "colt"), agg=None)
-        rels[name] = Relation(name, engine.materialize(bound, mult, sub_q.head))
-        stage_schemas[name] = sub_q.head
-    _, leaves = stages[-1]
-    atoms = _stage_atoms(leaves, query, stage_schemas)
-    sub_q = Query(atoms)
-    fj = factor(binary2fj(atoms, sub_q))
-    cap_plan = plan_capacities(
-        fj, stats=stats, safety=safety, compact_threshold=compact_threshold
+    stages = _stage_plans(query, plan_tree)
+    if not chain_stages and len(stages) > 1:
+        # hybrid baseline: non-root stages eager on the host, root compiled
+        for name, fj in stages[:-1]:
+            bound, mult = engine.execute(fj, rels, mode=_trie_modes(fj, "colt"), agg=None)
+            rels[name] = Relation(name, engine.materialize(bound, mult, fj.query.head))
+        stages = stages[-1:]
+    cap_plan = plan_chain_capacities(
+        stages, stats=stats, safety=safety, compact_threshold=compact_threshold
     )
-    runner = AdaptiveExecutor(fj, cap_plan, impl=impl, budget=budget, agg=agg, jit=jit)
+    if len(stages) == 1:  # classic single-stage surface (plain CapacityPlan)
+        cap_plan = cap_plan.stages[0]
+        runner = AdaptiveExecutor(
+            stages[0][1], cap_plan, impl=impl, budget=budget, agg=agg, jit=jit, tighten=True
+        )
+    else:
+        runner = AdaptiveExecutor(
+            tuple(stages), cap_plan, impl=impl, budget=budget, agg=agg, jit=jit, tighten=True
+        )
     out = runner.run_relations(rels)
     if info is not None:
         info.update(
@@ -240,12 +268,7 @@ def generic_join(
         if plan_tree is None:
             plan_tree = optimize(query, relations)
         order: list[str] = []
-        stage_schemas: dict[str, tuple[str, ...]] = {}
-        for name, leaves in _decompose(plan_tree):
-            atoms = _stage_atoms(leaves, query, stage_schemas)
-            sub_q = Query(atoms)
-            fj = factor(binary2fj(atoms, sub_q))
-            stage_schemas[name] = sub_q.head
+        for _name, fj in _stage_plans(query, plan_tree):
             for v in var_order_from_fj(fj):
                 if v not in order:
                     order.append(v)

@@ -28,7 +28,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field, replace
 
-from repro.core.optimizer import NodeEstimate, Stats, estimate_prefixes
+from repro.core.optimizer import NodeEstimate, StageStats, Stats, estimate_prefixes, stage_est
 from repro.core.plan import FreeJoinPlan
 from repro.kernels.csr_expand import OBLK
 from repro.relational.relation import Relation
@@ -129,12 +129,82 @@ class CapacityPlan:
         )
         return replace(self, capacities=caps, compact_to=ct)
 
+    def shrink_to(self, node: int, need: int, *, compaction: bool = False) -> "CapacityPlan":
+        """Tighten one node's capacity (or compaction target) down to a
+        *measured* requirement, block-rounded — the adaptive runner's
+        response to a buffer that ran mostly empty. Callers only shrink
+        when the buffer exceeds twice the rounded need, so a later small
+        overflow's grow_to (which at least doubles) lands back inside the
+        hysteresis band instead of oscillating."""
+        new = _round_block(max(1, int(need)), self.block)
+        if compaction:
+            cur = self.compact_to[node]
+            if cur is None or new >= cur:
+                return self
+            ct = tuple(new if i == node else c for i, c in enumerate(self.compact_to))
+            return replace(self, compact_to=ct)
+        if new >= self.capacities[node]:
+            return self
+        caps = tuple(new if i == node else c for i, c in enumerate(self.capacities))
+        # a compaction target at or above the shrunk capacity is pointless
+        ct = tuple(
+            None if i == node and c is not None and c >= caps[node] else c
+            for i, c in enumerate(self.compact_to)
+        )
+        return replace(self, capacities=caps, compact_to=ct)
+
     def __str__(self):
         parts = []
         for i, (cap, ct) in enumerate(zip(self.capacities, self.compact_to)):
             at = f"@p{self.compact_probe[i]}" if ct is not None and self.compact_probe else ""
             parts.append(f"n{i}:{cap}" + (f"->{ct}{at}" if ct is not None else ""))
         return "CapacityPlan[" + ", ".join(parts) + "]"
+
+
+@dataclass(frozen=True)
+class ChainCapacityPlan:
+    """Capacity plans for a whole bushy plan run as one compiled chain:
+    one CapacityPlan per stage, root last (`names` aligned). The adaptive
+    runner grows exactly the offending (stage, node) pair; growing any
+    stage recompiles the chain, because a stage's output buffer width is a
+    static shape of every downstream trie build."""
+
+    names: tuple[str, ...]
+    stages: tuple["CapacityPlan", ...]
+
+    def key(self) -> tuple:
+        """Hashable identity of every static shape in the chain (the
+        executor-cache key)."""
+        return tuple(
+            (cp.capacities, cp.compact_to, cp.compact_probe) for cp in self.stages
+        )
+
+    def grow_to(self, stage: int, node: int, need: int, *, compaction: bool = False):
+        cp = self.stages[stage].grow_to(node, need, compaction=compaction)
+        if cp is self.stages[stage]:
+            return self
+        return replace(
+            self, stages=tuple(cp if i == stage else c for i, c in enumerate(self.stages))
+        )
+
+    def shrink_to(self, stage: int, node: int, need: int, *, compaction: bool = False):
+        cp = self.stages[stage].shrink_to(node, need, compaction=compaction)
+        if cp is self.stages[stage]:
+            return self
+        return replace(
+            self, stages=tuple(cp if i == stage else c for i, c in enumerate(self.stages))
+        )
+
+    def with_schedules(self, schedules) -> "ChainCapacityPlan":
+        return replace(
+            self,
+            stages=tuple(replace(cp, schedule=s) for cp, s in zip(self.stages, schedules)),
+        )
+
+    def __str__(self):
+        return "Chain[" + "; ".join(
+            f"{n}:{cp}" for n, cp in zip(self.names, self.stages)
+        ) + "]"
 
 
 def plan_capacities(
@@ -147,6 +217,7 @@ def plan_capacities(
     block: int = OBLK,
     compact_threshold: float = 0.25,
     max_capacity: int = 1 << 22,
+    compact_output: bool = False,
 ) -> CapacityPlan:
     """Derive a CapacityPlan for `plan` (see module doc).
 
@@ -159,7 +230,11 @@ def plan_capacities(
 
     safety: multiplier on the cardinality estimates; compact_threshold:
     schedule compaction after a node when est-after / capacity falls below
-    this; max_capacity: clamp on planned (not grown) capacities."""
+    this; max_capacity: clamp on planned (not grown) capacities.
+    compact_output: allow a compact point on the final node too — for
+    non-root stages of a chained bushy plan, whose output buffer feeds the
+    next stage's trie build (a squeezed buffer means a smaller lexsort),
+    there is always "more work" after the last probe."""
     from repro.core.compiled import _static_schedule  # deferred: avoids a cycle
 
     if stats is None:
@@ -180,7 +255,7 @@ def plan_capacities(
         prefix[cover.alias] = prefix[cover.alias] + tuple(cover.vars)
         bound = agm_bound(prefix, sizes)
         cap = _round_block(min(max(1.0, est.expand) * safety, bound, float(max_capacity)), block)
-        last = est is estimates[-1]
+        last = est is estimates[-1] and not compact_output
         # earliest probe after which the predicted live fraction collapses:
         # compacting right there lets every remaining probe (and all later
         # nodes) run at the squeezed width
@@ -195,6 +270,16 @@ def plan_capacities(
             t = _round_block(min(max(1.0, a_est) * safety, agm_bound(prefix, sizes)), block)
             if a_est < compact_threshold * cap and t < cap:
                 target, cp_idx = t, j + 1
+        if compact_output and est is estimates[-1] and target is None:
+            # a stage's final frontier is the next stage's trie, whose build
+            # cost scales with the static buffer width — squeeze it whenever
+            # the estimate says the buffer is oversized, selective or not.
+            # No safety factor here: a too-small target is recovered by one
+            # compact-overflow retry that jumps to the *measured* live count,
+            # so steady state converges to a tight output buffer.
+            t = _round_block(min(max(1.0, est.after), agm_bound(prefix, sizes)), block)
+            if t < cap:
+                target, cp_idx = t, len(probes)
         caps.append(cap)
         compact.append(target)
         compact_probe.append(cp_idx)
@@ -208,3 +293,43 @@ def plan_capacities(
         block=block,
         schedule=schedule,
     )
+
+
+def plan_chain_capacities(
+    stages,
+    *,
+    stats: Stats,
+    safety: float = 2.0,
+    block: int = OBLK,
+    compact_threshold: float = 0.25,
+    max_capacity: int = 1 << 22,
+) -> ChainCapacityPlan:
+    """Capacity-plan a whole stage chain in one pass (no materialization).
+
+    stages: ((name, FreeJoinPlan), ...) root last, each plan's query built
+    over the stage's atoms (which may reference earlier stage names).
+    `stats` covers the *base* relations only; stage outputs are answered by
+    a StageStats view from the optimizer's cardinality estimates — each
+    stage's estimated Est (size + per-var distincts) registers before the
+    next stage plans, so stage output estimates feed every downstream
+    prefix estimate and AGM bound. Non-root stages plan with
+    compact_output=True so their output buffers (the next trie's static
+    width) get squeezed when the estimates say most lanes are dead."""
+    sstats = StageStats(stats)
+    cps = []
+    for i, (name, plan) in enumerate(stages):
+        root = i == len(stages) - 1
+        cps.append(
+            plan_capacities(
+                plan,
+                stats=sstats,
+                safety=safety,
+                block=block,
+                compact_threshold=compact_threshold,
+                max_capacity=max_capacity,
+                compact_output=not root,
+            )
+        )
+        if not root:
+            sstats.register(name, stage_est(plan.query.atoms, sstats))
+    return ChainCapacityPlan(names=tuple(n for n, _ in stages), stages=tuple(cps))

@@ -19,20 +19,34 @@ under jit on a device mesh:
 * Bag semantics via a mult column; factorized counting is decided statically
   from the plan (cover at its last level whose vars are never used again).
 
+Bushy plans run fully compiled (Sec 2.2: a binary plan decomposes into
+stages whose outputs feed later tries). make_chain_executor strings every
+stage's executor into ONE on-device program: a non-root stage runs with
+agg=None, its output columns stay on device as a padded buffer (invalid
+lanes stamped PAD_KEY with multiplicity 0), and the next stage builds a
+*weighted* StaticTrie straight from that buffer — mult-0 pad rows weigh
+nothing in every group aggregate, so no host materialization, no eager
+engine, no round-trips. This is the unification the paper argues for: the
+binary-join-shaped stages and the WCOJ root share one execution substrate.
+
 The shared-driver contract (one planning pass serves the local *and* the
 distributed compiled paths — api.compiled_free_join and
 distributed.spmd_count are both thin drivers over the same stack):
 
 * The driver builds one optimizer.Stats cache (one np.unique per referenced
-  column) and one StaticSchedule (one plan walk) per query, and threads
-  them through optimize -> capacity.plan_capacities ->
-  optimizer.estimate_prefixes -> make_executor. The schedule rides on the
-  CapacityPlan so every later executor build reuses it.
+  base column) and one StaticSchedule per stage (one plan walk each), and
+  threads them through optimize -> capacity.plan_chain_capacities ->
+  optimizer.estimate_prefixes -> make_executor. Each schedule rides on its
+  stage's CapacityPlan so every later executor build reuses it. Stage
+  output statistics are *estimated* (optimizer.StageStats) — the chain
+  never materializes a stage on the host just to count it.
 * capacity.plan_capacities derives a CapacityPlan — per-node expansion
   capacities plus compaction targets — from the per-prefix cardinality
-  estimates capped by the AGM bound. No manual capacities. The distributed
-  driver feeds it per-shard statistics instead (sizes and distinct counts
-  shrunk by the hypercube shares); nothing else changes.
+  estimates capped by the AGM bound; plan_chain_capacities does it for a
+  whole stage chain, squeezing each stage's output buffer (the next trie's
+  static width) at a compact_output point. No manual capacities. The
+  distributed driver feeds per-shard statistics instead (sizes and
+  distinct counts shrunk by the hypercube shares); nothing else changes.
 * make_executor builds the jit-able executor for one capacity vector.
   Buffer pressure is reported per node as *required totals*, never silently
   and never as mere bits: agg="count" returns (count, need_expand,
@@ -42,15 +56,21 @@ distributed.spmd_count are both thin drivers over the same stack):
   live lane count at its compact point; node i overflowed iff the need
   exceeds its capacity (resp. compaction target), and the need tells the
   retry loop the exact capacity to jump to.
-* AdaptiveExecutor wraps make_executor in an overflow-retry loop: on
-  overflow it grows exactly the offending node's capacity (or compaction
-  target) straight to the reported need (CapacityPlan.grow_to — one retry,
-  not a geometric ladder) and re-runs, caching one compiled executor per
-  capacity vector — steady-state traffic never recompiles and never
-  overflows, because the grown plan is remembered.
+* AdaptiveExecutor drives the whole chain (a single plan is a chain of
+  one) in an overflow-retry loop: on any stage's overflow it grows exactly
+  the offending node's capacity (or compaction target) straight to the
+  reported need (grow_to — one retry, not a geometric ladder) and re-runs,
+  caching one compiled executor per capacity-vector chain. With
+  tighten=True (the api driver's default) a successful run also *shrinks*
+  any buffer that ran more than twice oversized down to its measured need
+  and re-runs once — steady-state traffic pays for measured frontiers,
+  never recompiles, and never overflows, because the learned plan is
+  remembered.
 * Zero-row relations are handled natively: an empty relation builds a
   StaticTrie whose every frontier expansion yields zero live lanes and
-  whose probes match nothing, so drivers need no host-side empty gate.
+  whose probes match nothing, so drivers need no host-side empty gate. An
+  empty *stage output* is the weighted-trie analogue: an all-pad buffer
+  whose total weight is zero.
 
 make_count_fn/count_query keep the original count-only surface (manual
 capacities, scalar overflow bit) for benchmarks and dry runs;
@@ -59,6 +79,7 @@ loop *outside* the shard_map collective.
 """
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass
 
 import jax
@@ -67,6 +88,12 @@ import numpy as np
 
 from repro.core.plan import FreeJoinPlan
 from repro.kernels import ops
+
+# Key stamped on the pad (invalid) lanes of a materialized stage buffer.
+# Real join keys are dictionary-encoded int32 >= 0 and never reach int32
+# max, so pad rows lose every probe immediately; correctness does not rest
+# on that (their multiplicity is 0), it only keeps dead lanes short-lived.
+PAD_KEY = np.int32(2**31 - 1)
 
 
 @dataclass(frozen=True)
@@ -118,9 +145,27 @@ def _static_schedule(plan: FreeJoinPlan) -> StaticSchedule:
 
 
 class StaticTrie:
-    """Sort-based trie with static shapes (see module docstring)."""
+    """Sort-based trie with static shapes (see module docstring).
 
-    def __init__(self, cols: dict[str, jnp.ndarray], lops: _LevelOps, impl: str, budget: int = 32):
+    `mult` (optional) marks a *weighted* trie built from another stage's
+    padded output buffer: row i carries multiplicity mult[i] >= 0, and rows
+    with mult 0 are padding (dead executor lanes) that must contribute
+    nothing. Weighted tries keep two per-group aggregates — physical row
+    counts (for last-level enumeration addressing) and mult sums (for
+    factorized counting and bag multiplicity) — and the executor folds the
+    per-row mult in (and kills mult-0 lanes) whenever it enumerates physical
+    rows. Pad rows carry the PAD_KEY sentinel on every column so they die on
+    the first probe; correctness never rests on the sentinel, only on the
+    zero weight."""
+
+    def __init__(
+        self,
+        cols: dict[str, jnp.ndarray],
+        lops: _LevelOps,
+        impl: str,
+        budget: int = 32,
+        mult: jnp.ndarray | None = None,
+    ):
         self.impl = impl
         self.L = len(lops.levels)
         self.levels = lops.levels
@@ -132,9 +177,12 @@ class StaticTrie:
             # force zero live lanes, so the sentinel is never observable
             cols = {k: jnp.full(1, -1, jnp.int32) for k in cols}
             some = next(iter(cols.values()))
+            mult = None
         n = some.shape[0]
         self.n = n
         self.cols = {k: v.astype(jnp.int32) for k, v in cols.items()}
+        self.mult_col = None if mult is None else mult.astype(jnp.int32)
+        self.total_mult = None if mult is None else jnp.sum(self.mult_col)
         self.trivial = self.L == 1 and not lops.probed[0]
         if self.trivial:  # pure cover: iterate the base table, zero build
             return
@@ -143,12 +191,14 @@ class StaticTrie:
         self.order = order.astype(jnp.int32)
         sc = {v: self.cols[v][order] for v in all_vars}
         self.sorted_cols = sc
+        sm = None if self.mult_col is None else self.mult_col[order]
         idx = jnp.arange(n, dtype=jnp.int32)
         # depth-d group ids for d = 0..L, flags for d = 1..L
         self.g = [jnp.zeros(n, jnp.int32)]  # g[0] = root
         self.kpos = [jnp.zeros(1, jnp.int32)]  # first position of each group
         flag = jnp.zeros(n, dtype=bool)
         self.child_base, self.child_counts, self.row_count, self.tables = [], [], [], []
+        self.row_weight = []
         for d, lv in enumerate(lops.levels):
             diff = jnp.zeros(n, dtype=bool).at[0].set(True)
             for v in lv:
@@ -166,6 +216,8 @@ class StaticTrie:
             self.child_base.append(cbase.astype(jnp.int32))
             self.child_counts.append(ccnt.astype(jnp.int32))
             self.row_count.append(rcnt)
+            if sm is not None:
+                self.row_weight.append(jax.ops.segment_sum(sm, gd1, num_segments=n))
             if lops.probed[d]:
                 parent = jnp.where(flag, self.g[d], -idx - 2)  # sentinels unique
                 key_rows = jnp.stack([parent] + [jnp.where(flag, sc[v], 0) for v in lv], axis=1)
@@ -173,10 +225,21 @@ class StaticTrie:
             else:
                 self.tables.append(None)
 
-    # depth-d group sizes in rows (for factorized count / multiplicity)
+    # depth-d group sizes (weighted by mult for stage tries): drives
+    # factorized count and last-level probe multiplicity
     def rows_under(self, d: int, gids: jnp.ndarray) -> jnp.ndarray:
         if self.empty:
             return jnp.zeros(gids.shape, jnp.int32)
+        if self.trivial or d == 0:
+            if self.total_mult is not None:
+                return jnp.broadcast_to(self.total_mult, gids.shape)
+            return jnp.full(gids.shape, self.n, jnp.int32)
+        if self.mult_col is not None:
+            return self.row_weight[d - 1][gids]
+        return self.row_count[d - 1][gids]
+
+    # physical depth-d group sizes: addressing for last-level enumeration
+    def _phys_rows(self, d: int, gids: jnp.ndarray) -> jnp.ndarray:
         if self.trivial or d == 0:
             return jnp.full(gids.shape, self.n, jnp.int32)
         return self.row_count[d - 1][gids]
@@ -198,8 +261,11 @@ class StaticTrie:
         if self.trivial:
             return z, jnp.full(gids.shape, self.n, jnp.int32)
         if last:
-            base = self.kpos[d][jnp.clip(gids, 0, self.n - 1)] if d > 0 else jnp.zeros(gids.shape, jnp.int32)
-            counts = self.rows_under(d, gids)
+            if d > 0:
+                base = self.kpos[d][jnp.clip(gids, 0, self.n - 1)]
+            else:
+                base = jnp.zeros(gids.shape, jnp.int32)
+            counts = self._phys_rows(d, gids)
             return base, counts
         return self.child_base[d][gids], self.child_counts[d][gids]
 
@@ -214,6 +280,15 @@ class StaticTrie:
             return [self.cols[v][rows] for v in lv], self.g[d + 1][members]
         kp = self.kpos[d + 1][members]
         return [self.sorted_cols[v][kp] for v in lv], members
+
+    def iter_mult(self, members) -> jnp.ndarray | None:
+        """Per-row multiplicity of the physical rows enumerated by a
+        last-level bind_iter (None for unweighted tries: each row counts 1).
+        A zero marks a pad row — the executor kills that lane."""
+        if self.mult_col is None:
+            return None
+        rows = members if self.trivial else self.order[members]
+        return self.mult_col[rows]
 
 
 def make_executor(
@@ -235,9 +310,13 @@ def make_executor(
     all — compact after the node; smaller values compact mid-node so the
     remaining probes run at the squeezed width); schedule: the query's
     StaticSchedule if the driver already computed it (None = walk the plan
-    here). Returns fn(rel_cols: {alias: {var: (N,) int32}}) ->
+    here). Returns fn(rel_cols: {alias: {var: (N,) int32}}, rel_mults) ->
       agg="count":  (count, need_expand, need_compact)
       agg=None:     (bound, valid, mult, need_expand, need_compact)
+    rel_mults (optional) maps an alias to a per-row multiplicity vector;
+    such a relation is a *weighted* (stage-output) buffer whose mult-0 rows
+    are padding — see StaticTrie. rel_cols may contain extra aliases (the
+    chain driver passes one growing dict); only the plan's are read.
     where need_expand/need_compact are (num_executed_nodes,) int32 vectors
     of required totals: need_expand[i] is the lane count node i's expansion
     produced, need_compact[i] the live count at its compact point (0 when
@@ -262,8 +341,15 @@ def make_executor(
     )
     assert len(compact_probe) == nsched, "one compact point per executed node"
 
-    def run(rel_cols: dict[str, dict[str, jnp.ndarray]]):
-        tries = {a: StaticTrie(rel_cols[a], level_ops[a], impl, budget) for a in level_ops}
+    def run(
+        rel_cols: dict[str, dict[str, jnp.ndarray]],
+        rel_mults: dict[str, jnp.ndarray] | None = None,
+    ):
+        mults = rel_mults or {}
+        tries = {
+            a: StaticTrie(rel_cols[a], level_ops[a], impl, budget, mult=mults.get(a))
+            for a in level_ops
+        }
         depth = {a: 0 for a in level_ops}
         # frontier
         cap = 1
@@ -321,7 +407,13 @@ def make_executor(
                 depth[cover.alias] = d + 1
                 if new_g is None or depth[cover.alias] == t.L:
                     # last-level iteration enumerates physical rows, so bag
-                    # multiplicity is already accounted for — no mult here.
+                    # multiplicity is already accounted for — except on a
+                    # weighted (stage-output) trie, whose per-row mult folds
+                    # in here and whose mult-0 pad rows die on the spot.
+                    rm = t.iter_mult(memc)
+                    if rm is not None:
+                        mult = mult * jnp.where(valid, rm, 1)
+                        valid = valid & (rm > 0)
                     gid.pop(cover.alias, None)
                 else:
                     gid[cover.alias] = new_g
@@ -354,6 +446,9 @@ def make_executor(
         nc = jnp.stack(need_compact) if nsched else jnp.zeros(0, jnp.int32)
         if agg == "count":
             return jnp.sum(jnp.where(valid, mult, 0)), ne, nc
+        # lanes that went through a weighted trie's probe path can survive
+        # with mult 0 (pad groups weigh nothing); they are not output rows
+        valid = valid & (mult > 0)
         return bound, valid, mult, ne, nc
 
     return run
@@ -371,6 +466,61 @@ def overflows(cap_plan, need_expand, need_compact):
     return ne > caps, nc > cts
 
 
+def make_chain_executor(
+    stages,
+    cap_plans,
+    *,
+    impl: str = "jnp",
+    budget: int = 32,
+    agg: str | None = "count",
+):
+    """One on-device program for a whole bushy plan (Sec 2.2 stages).
+
+    stages: ((name, FreeJoinPlan), ...) with the root stage last — each plan
+    may reference earlier stages' names as relation aliases; cap_plans: one
+    CapacityPlan per stage (schedule riding along). Every non-root stage
+    runs its make_executor with agg=None, its output columns stay on device
+    as a padded buffer (invalid lanes stamped PAD_KEY, multiplicity 0), and
+    the next stage builds a weighted StaticTrie straight from that buffer —
+    no host round-trip, no eager engine. Returns
+        run(rel_cols) -> (root outputs..., need_expand_t, need_compact_t)
+    where rel_cols holds the *base* relations only and the need vectors are
+    per-stage tuples (one (num_nodes,) int32 vector each, stage order)."""
+    assert len(stages) == len(cap_plans) >= 1, "one capacity plan per stage"
+    fns = []
+    for i, ((_name, plan), cp) in enumerate(zip(stages, cap_plans)):
+        fns.append(
+            make_executor(
+                plan,
+                cp.capacities,
+                compact_to=cp.compact_to,
+                compact_probe=getattr(cp, "compact_probe", ()),
+                impl=impl,
+                budget=budget,
+                agg=agg if i == len(stages) - 1 else None,
+                schedule=cp.schedule,
+            )
+        )
+
+    def run(rel_cols: dict[str, dict[str, jnp.ndarray]]):
+        cols = dict(rel_cols)
+        stage_mults: dict[str, jnp.ndarray] = {}
+        nes, ncs = [], []
+        for (name, plan), fn in zip(stages[:-1], fns[:-1]):
+            bound, valid, mult, ne, nc = fn(cols, stage_mults)
+            head = plan.query.head
+            cols[name] = {v: jnp.where(valid, bound[v], PAD_KEY) for v in head}
+            stage_mults[name] = jnp.where(valid, mult, 0).astype(jnp.int32)
+            nes.append(ne)
+            ncs.append(nc)
+        out = fns[-1](cols, stage_mults)
+        nes.append(out[-2])
+        ncs.append(out[-1])
+        return out[:-2] + (tuple(nes), tuple(ncs))
+
+    return run
+
+
 def make_count_fn(
     plan: FreeJoinPlan,
     capacities: list[int],
@@ -385,7 +535,9 @@ def make_count_fn(
     vectors directly so its retry loop can grow the offending node."""
     if schedule is None:
         schedule = _static_schedule(plan)
-    inner = make_executor(plan, capacities, impl=impl, budget=budget, agg="count", schedule=schedule)
+    inner = make_executor(
+        plan, capacities, impl=impl, budget=budget, agg="count", schedule=schedule
+    )
     caps = jnp.asarray(
         tuple(int(c) for c in capacities[: len(schedule)]) or (0,), jnp.int32
     )
@@ -428,27 +580,42 @@ def count_query(
 
 def relations_to_cols(plan: FreeJoinPlan, relations) -> dict[str, dict[str, jnp.ndarray]]:
     """Device int32 columns for every alias the plan touches."""
+    return stage_relations_to_cols((("__root", plan),), relations)
+
+
+def _base_aliases(stages) -> set[str]:
+    """Every relation alias a stage chain reads from the caller — stage
+    names are produced on device by the chain executor, never read."""
+    names = {name for name, _ in stages}
+    return {sa.alias for _, plan in stages for node in plan.nodes for sa in node} - names
+
+
+def stage_relations_to_cols(stages, relations) -> dict[str, dict[str, jnp.ndarray]]:
+    """Device int32 columns for every *base* alias a stage chain touches."""
     return {
         a: {v: jnp.asarray(relations[a].columns[v], jnp.int32) for v in relations[a].schema}
-        for a in {sa.alias for node in plan.nodes for sa in node}
+        for a in _base_aliases(stages)
     }
 
 
 class AdaptiveExecutor:
-    """Overflow-retrying driver around make_executor (see module docstring).
+    """Overflow-retrying driver around the chained executor (see module
+    docstring).
 
-    Runs the executor for the current CapacityPlan; if any node reports a
-    need above its capacity, jumps exactly that node's capacity (or
-    compaction target) to the reported need and re-runs — one retry per
-    offending node, not a doubling ladder. Compiled executors are cached per
-    capacity vector and the grown plan replaces the initial one, so a stream
-    of similar queries pays the retry + recompile once and then runs
-    overflow-free.
+    Accepts a single FreeJoinPlan + CapacityPlan (the classic one-stage
+    surface) or a full stage chain — ((name, plan), ...) root last — with a
+    ChainCapacityPlan; either way the whole program runs as ONE compiled
+    call. If any stage's node reports a need above its capacity, jumps
+    exactly that node's capacity (or compaction target) to the reported
+    need and re-runs — one retry per offending node, not a doubling ladder.
+    Compiled executors are cached per capacity-vector chain and the grown
+    plan replaces the initial one, so a stream of similar queries pays the
+    retry + recompile once and then runs overflow-free.
     """
 
     def __init__(
         self,
-        plan: FreeJoinPlan,
+        plan,
         cap_plan,
         *,
         impl: str = "jnp",
@@ -456,65 +623,137 @@ class AdaptiveExecutor:
         agg: str | None = "count",
         jit: bool = True,
         max_retries: int = 12,
+        tighten: bool = False,
     ):
-        plan.validate()
-        self.plan = plan
-        self.cap_plan = cap_plan
-        # reuse the schedule the planner already computed, if it rode along
-        self.schedule = getattr(cap_plan, "schedule", None) or _static_schedule(plan)
+        from repro.core.capacity import ChainCapacityPlan  # deferred: no cycle
+
+        if isinstance(plan, FreeJoinPlan):
+            stages = (("__root", plan),)
+        else:
+            stages = tuple((name, p) for name, p in plan)
+        chain = (
+            cap_plan
+            if isinstance(cap_plan, ChainCapacityPlan)
+            else ChainCapacityPlan(names=tuple(n for n, _ in stages), stages=(cap_plan,))
+        )
+        assert len(chain.stages) == len(stages), "one capacity plan per stage"
+        # reuse the schedules the planner already computed, if they rode along
+        chain = chain.with_schedules(
+            tuple(
+                cp.schedule if cp.schedule is not None else _static_schedule(p)
+                for cp, (_n, p) in zip(chain.stages, stages)
+            )
+        )
+        for _name, p in stages:
+            p.validate()
+        self.stages = stages
+        self._single = len(stages) == 1
+        self.plan = stages[-1][1]  # the root stage plan
+        self.cap_plan = chain.stages[0] if self._single else chain
+        self.schedules = tuple(cp.schedule for cp in chain.stages)
+        self.schedule = self.schedules[-1]
         self.impl = impl
         self.budget = budget
         self.agg = agg
         self.jit = jit
         self.max_retries = max_retries
+        self.tighten = tighten
         self.retries = 0  # total overflow re-runs across calls
+        self.reshapes = 0  # tightening re-runs across calls
+        self.calls = 0  # top-level call chains issued (retries excluded)
         self._cache: dict[tuple, object] = {}
+        self._dev_cols: dict[str, tuple] = {}  # alias -> (weakref(rel), device cols)
 
     @property
     def compiles(self) -> int:
         return len(self._cache)
 
-    def _fn(self, cp):
-        compact_probe = getattr(cp, "compact_probe", ())
-        key = (cp.capacities, cp.compact_to, compact_probe)
+    def _as_chain(self, cp):
+        from repro.core.capacity import ChainCapacityPlan  # deferred: no cycle
+
+        if isinstance(cp, ChainCapacityPlan):
+            return cp
+        return ChainCapacityPlan(names=tuple(n for n, _ in self.stages), stages=(cp,))
+
+    def _fn(self, chain):
+        key = chain.key()
         if key not in self._cache:
-            fn = make_executor(
-                self.plan,
-                cp.capacities,
-                compact_to=cp.compact_to,
-                compact_probe=compact_probe,
+            fn = make_chain_executor(
+                self.stages,
+                chain.stages,
                 impl=self.impl,
                 budget=self.budget,
                 agg=self.agg,
-                schedule=self.schedule,
             )
             self._cache[key] = jax.jit(fn) if self.jit else fn
         return self._cache[key]
 
     def __call__(self, rel_cols: dict[str, dict[str, jnp.ndarray]]):
         """agg="count" -> count scalar; agg=None -> (bound, valid, mult)."""
-        cp = self.cap_plan
+        from repro.core.capacity import _round_block  # deferred: no cycle
+
+        chain = self._as_chain(self.cap_plan)
+        self.calls += 1
+        tightened = False
         for _ in range(self.max_retries + 1):
-            out = self._fn(cp)(rel_cols)
-            ne = np.asarray(out[-2])
-            nc = np.asarray(out[-1])
-            oe, oc = overflows(cp, ne, nc)
-            if not (oe.any() or oc.any()):
-                self.cap_plan = cp  # steady state: keep the grown plan
-                result = out[:-2]
-                return result[0] if self.agg == "count" else result
-            for i in np.flatnonzero(oc):
-                cp = cp.grow_to(int(i), int(nc[i]), compaction=True)
-            for i in np.flatnonzero(oe):
-                cp = cp.grow_to(int(i), int(ne[i]))
-            self.retries += 1
+            out = self._fn(chain)(rel_cols)
+            grown = chain
+            for s, (cp, ne, nc) in enumerate(zip(chain.stages, out[-2], out[-1])):
+                ne, nc = np.asarray(ne), np.asarray(nc)
+                oe, oc = overflows(cp, ne, nc)
+                for i in np.flatnonzero(oc):
+                    grown = grown.grow_to(s, int(i), int(nc[i]), compaction=True)
+                for i in np.flatnonzero(oe):
+                    grown = grown.grow_to(s, int(i), int(ne[i]))
+            if grown is not chain:
+                chain = grown
+                self.retries += 1
+                continue
+            if self.tighten and not tightened:
+                # success with measured needs in hand: shrink any buffer
+                # that ran >2x oversized and re-run once at the tight
+                # shapes, so steady state pays for measured frontiers, not
+                # for planning estimates (the planner only has to be right
+                # on average; the measurement is exact)
+                shrunk = chain
+                for s, (ne, nc) in enumerate(zip(out[-2], out[-1])):
+                    ne, nc = np.asarray(ne), np.asarray(nc)
+                    for i in range(len(ne)):
+                        cp = shrunk.stages[s]
+                        if cp.capacities[i] > 2 * _round_block(int(ne[i]), cp.block):
+                            shrunk = shrunk.shrink_to(s, i, int(ne[i]))
+                        ct = shrunk.stages[s].compact_to[i]
+                        if ct is not None and ct > 2 * _round_block(int(nc[i]), cp.block):
+                            shrunk = shrunk.shrink_to(s, i, int(nc[i]), compaction=True)
+                if shrunk is not chain:
+                    chain = shrunk
+                    tightened = True
+                    self.reshapes += 1
+                    continue
+            # steady state: keep the grown/tightened plan
+            self.cap_plan = chain.stages[0] if self._single else chain
+            result = out[:-2]
+            return result[0] if self.agg == "count" else result
         raise RuntimeError(
-            f"frontier overflow persists after {self.max_retries} retries: {cp}"
+            f"frontier overflow persists after {self.max_retries} retries: {chain}"
         )
 
     def run_relations(self, relations):
-        """Convenience: host relations in, host results out."""
-        out = self(relations_to_cols(self.plan, relations))
+        """Convenience: host relations in, host results out. Device columns
+        are cached per alias and revalidated by relation object identity
+        (weakly held), so a stream of calls over the same immutable
+        relations uploads each base column once — only relations that are
+        actually new objects (e.g. a hybrid driver's freshly materialized
+        stage outputs) pay the transfer again."""
+        cols = {}
+        for a in sorted(_base_aliases(self.stages)):
+            rel = relations[a]
+            hit = self._dev_cols.get(a)
+            if hit is None or hit[0]() is not rel:
+                dev = {v: jnp.asarray(rel.columns[v], jnp.int32) for v in rel.schema}
+                self._dev_cols[a] = (weakref.ref(rel), dev)
+            cols[a] = self._dev_cols[a][1]
+        out = self(cols)
         if self.agg == "count":
             return int(out)
         return materialize_compiled(*out)

@@ -56,6 +56,44 @@ class Stats:
         return self._distinct[key]
 
 
+class StageStats:
+    """Statistics view that also answers for *planned* stage outputs —
+    relations that never exist on the host, because the chained compiled
+    path materializes them only as device buffers. A stage's size and
+    per-var distinct counts come from the optimizer's Est of its sub-query
+    (register() after planning the stage, before any downstream stage reads
+    it); every other alias falls through to the base Stats cache, so the
+    whole chain still costs one np.unique per referenced base column."""
+
+    def __init__(self, base: Stats):
+        self.base = base
+        self._stage: dict[str, Est] = {}
+
+    def register(self, alias: str, est: Est) -> None:
+        self._stage[alias] = est
+
+    def size(self, alias: str) -> int:
+        if alias in self._stage:
+            return int(max(1.0, self._stage[alias].card))
+        return self.base.size(alias)
+
+    def distinct(self, alias: str, var: str) -> float:
+        if alias in self._stage:
+            e = self._stage[alias]
+            return float(min(max(1.0, e.distinct.get(var, e.card)), max(1.0, e.card)))
+        return self.base.distinct(alias, var)
+
+
+def stage_est(atoms: list[Atom], stats) -> Est:
+    """Estimated output of joining `atoms` (a stage sub-query): fold the
+    binary estimator left to right. `stats` may be a StageStats so earlier
+    stages' estimates flow into later stages'."""
+    cur = base_est(atoms[0], stats)
+    for a in atoms[1:]:
+        cur = join_est(cur, base_est(a, stats))
+    return cur
+
+
 def base_est(atom: Atom, stats: Stats, bad: bool = False) -> Est:
     if bad:
         return Est(1.0, {v: 1.0 for v in atom.vars}, [atom])

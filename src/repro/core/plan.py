@@ -8,7 +8,7 @@ The nodes must partition every atom's variables (Def 3.5), and a valid plan
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.relational.schema import Atom, Query
 
@@ -59,7 +59,9 @@ class FreeJoinPlan:
     def validate(self) -> None:
         # partitioning
         for atom in self.query.atoms:
-            got = [v for node in self.nodes for sa in node if sa.alias == atom.alias for v in sa.vars]
+            got = [
+                v for node in self.nodes for sa in node if sa.alias == atom.alias for v in sa.vars
+            ]
             if sorted(got) != sorted(atom.vars) or len(set(got)) != len(got):
                 raise ValueError(
                     f"plan does not partition atom {atom}: got {got} for vars {atom.vars}"

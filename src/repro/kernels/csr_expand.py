@@ -24,7 +24,9 @@ from jax.experimental import pallas as pl
 OBLK = 1024
 
 
-def _expand_kernel(starts_ref, base_ref, total_ref, fr_ref, member_ref, *, f: int, steps: int, oblk: int):
+def _expand_kernel(
+    starts_ref, base_ref, total_ref, fr_ref, member_ref, *, f: int, steps: int, oblk: int
+):
     i = pl.program_id(0)
     j = jax.lax.broadcasted_iota(jnp.int32, (oblk,), 0) + i * oblk
     starts = starts_ref[...]

@@ -64,25 +64,36 @@ def build_table(keys: jnp.ndarray, budget: int = PROBE_BUDGET) -> Table:
 
 @functools.partial(jax.jit, static_argnames=("budget",))
 def _probe_jnp(slots, keys, queries, budget: int):
-    # rolled as a scan, not a Python loop: XLA's CPU pipeline hits multi-
-    # minute compiles on the 32x-unrolled gather chain at some small shapes
-    # (run the tier-1 suite at 17 keys / 64 queries to reproduce); the scan
-    # compiles in milliseconds and runs identically
+    # rolled as a while_loop, not a Python loop: XLA's CPU pipeline hits
+    # multi-minute compiles on the 32x-unrolled gather chain at some small
+    # shapes (run the tier-1 suite at 17 keys / 64 queries to reproduce);
+    # the rolled loop compiles in milliseconds. Early exit: at load factor
+    # <= 0.5 almost every lane resolves within the first couple of probe
+    # rounds, so the loop stops as soon as *all* lanes are done instead of
+    # always paying `budget` gather rounds — same results, identical math.
     cap = slots.shape[0] - budget
     h = mix32(queries) & (cap - 1)
     nkeys = keys.shape[0]
 
-    def step(carry, p):
-        res, done = carry
+    def cond(state):
+        p, _res, done = state
+        return (p < budget) & ~done.all()
+
+    def body(state):
+        p, res, done = state
         cand = slots[h + p]
         is_empty = cand < 0
         krow = keys[jnp.clip(cand, 0, nkeys - 1)]
         match = (~is_empty) & (krow == queries).all(axis=-1)
         hit = match & ~done
-        return (jnp.where(hit, cand, res), done | hit | is_empty), None
+        return p + 1, jnp.where(hit, cand, res), done | hit | is_empty
 
-    init = (jnp.full(h.shape, -1, dtype=jnp.int32), jnp.zeros(h.shape, dtype=bool))
-    (res, _), _ = jax.lax.scan(step, init, jnp.arange(budget, dtype=jnp.int32))
+    init = (
+        jnp.int32(0),
+        jnp.full(h.shape, -1, dtype=jnp.int32),
+        jnp.zeros(h.shape, dtype=bool),
+    )
+    _, res, _ = jax.lax.while_loop(cond, body, init)
     return res
 
 

@@ -126,7 +126,7 @@ def collective_bytes_scaled(hlo_text: str, repeats: int) -> dict[str, int]:
 
 
 def _sds(tree):
-    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
 
 
 def _cost(compiled) -> dict:
@@ -203,7 +203,7 @@ def _lower_kind(spec, cfg, shape_name: str, mesh, opt_dtype: str, microbatches: 
                 "v": pshard,
             }
             bshard = jax.tree.map(
-                lambda l: jax.sharding.NamedSharding(mesh, shard.batch_spec(l.shape, mesh)),
+                lambda x: jax.sharding.NamedSharding(mesh, shard.batch_spec(x.shape, mesh)),
                 ins,
             )
             step_fn = make_train_step(cfg, tcfg)
@@ -216,7 +216,7 @@ def _lower_kind(spec, cfg, shape_name: str, mesh, opt_dtype: str, microbatches: 
             lowered = jitted.lower(_sds(params_shapes), _sds(opt_shapes), ins)
         elif kind == "prefill":
             bshard = jax.tree.map(
-                lambda l: jax.sharding.NamedSharding(mesh, shard.batch_spec(l.shape, mesh)),
+                lambda x: jax.sharding.NamedSharding(mesh, shard.batch_spec(x.shape, mesh)),
                 ins,
             )
             jitted = jax.jit(
@@ -353,7 +353,8 @@ def main():
             json.dump(rec, f, indent=1)
         status = rec["status"]
         extra = (
-            f"flops/dev={rec.get('flops'):.3e} coll={sum(rec.get('collective_bytes', {}).values()):.3e}B"
+            f"flops/dev={rec.get('flops'):.3e}"
+            f" coll={sum(rec.get('collective_bytes', {}).values()):.3e}B"
             f" compile={rec.get('seconds_to_compile')}s"
             if status == "ok" and rec.get("flops")
             else rec.get("why", rec.get("error", ""))

@@ -17,11 +17,9 @@ import argparse  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
 
-import numpy as np  # noqa: E402
-
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core import binary2fj, factor  # noqa: E402
 from repro.core.compiled import make_count_fn  # noqa: E402
@@ -68,6 +66,9 @@ def lower_join(multi_pod: bool, rows_per_shard: int = 65536, cap: int = 1 << 20)
                     mesh=mesh,
                     in_specs=(jax.tree.map(lambda _: spec, cols_sds),),
                     out_specs=(P(), P()),
+                    # the probe's early-exit while_loop has no replication
+                    # rule; outputs are explicitly psum-reduced
+                    check_rep=False,
                 )
             )
             t0 = time.time()

@@ -79,7 +79,7 @@ def measure(arch: str, shape: str, levers: dict) -> dict:
             opt_shapes = jax.eval_shape(lambda p: init_state(tcfg.adamw, p), params_shapes)
             oshard = {"step": NamedSharding(mesh, P()), "m": pshard, "v": pshard}
             bshard = jax.tree.map(
-                lambda l: NamedSharding(mesh, shard.batch_spec(l.shape, mesh)), ins
+                lambda x: NamedSharding(mesh, shard.batch_spec(x.shape, mesh)), ins
             )
             fn = jax.jit(
                 make_train_step(cfg, tcfg),

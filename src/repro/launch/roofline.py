@@ -43,14 +43,18 @@ def model_flops(arch: str, shape: str) -> float:
     import jax
 
     shapes = jax.eval_shape(
-        lambda k: __import__("repro.models.transformer", fromlist=["init_params"]).init_params(k, cfg),
+        lambda k: __import__(
+            "repro.models.transformer", fromlist=["init_params"]
+        ).init_params(k, cfg),
         jax.random.PRNGKey(0),
     )
     total = sum(x.size for x in jax.tree.leaves(shapes))
     if cfg.moe is not None:
         # subtract inactive expert params
         m = cfg.moe
-        moe_layers = sum(1 for i in range(cfg.num_layers) if cfg.is_moe_layer(i % len(cfg.block_pattern)))
+        moe_layers = sum(
+            1 for i in range(cfg.num_layers) if cfg.is_moe_layer(i % len(cfg.block_pattern))
+        )
         expert_params = moe_layers * m.num_experts * (
             (2 * cfg.d_model * m.d_ff) + (m.d_ff * cfg.d_model)
         )
@@ -121,7 +125,10 @@ def main():
         else:
             rows.append({"arch": rec["arch"], "shape": rec["shape"], "dominant": "FAILED",
                          "why": rec.get("error", "")})
-    hdr = f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} {'dominant':>10s} {'useful':>7s}"
+    hdr = (
+        f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
+        f" {'coll_s':>10s} {'dominant':>10s} {'useful':>7s}"
+    )
     print(hdr)
     for r in rows:
         if "compute_s" in r:
@@ -130,7 +137,10 @@ def main():
                 f" {r['collective_s']:10.4f} {r['dominant']:>10s} {r['useful_ratio']:7.1%}"
             )
         else:
-            print(f"{r['arch']:24s} {r['shape']:12s} {'-':>10s} {'-':>10s} {'-':>10s} {r['dominant']:>10s}  {r.get('why','')[:40]}")
+            print(
+                f"{r['arch']:24s} {r['shape']:12s} {'-':>10s} {'-':>10s} {'-':>10s}"
+                f" {r['dominant']:>10s}  {r.get('why', '')[:40]}"
+            )
     if args.csv:
         import csv
 

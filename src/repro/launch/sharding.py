@@ -177,5 +177,5 @@ def cache_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
 
 def cache_shardings(cache_shapes, mesh: Mesh):
     return jax.tree.map(
-        lambda l: NamedSharding(mesh, cache_spec(l.shape, mesh)), cache_shapes
+        lambda x: NamedSharding(mesh, cache_spec(x.shape, mesh)), cache_shapes
     )

@@ -116,7 +116,6 @@ def mamba_decode(p, cfg: MambaConfig, x, conv_buf, h):
     Returns (y, conv_buf, h)."""
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
     xi, z = jnp.split(xz, 2, axis=-1)
-    w = cfg.conv_width
     window = jnp.concatenate([conv_buf, xi], axis=1)  # (B, w, di)
     conv = jnp.einsum("bwi,wi->bi", window, p["conv"].astype(x.dtype)) + p["conv_b"].astype(x.dtype)
     xi1 = jax.nn.silu(conv)[:, None]  # (B, 1, di)
@@ -127,7 +126,9 @@ def mamba_decode(p, cfg: MambaConfig, x, conv_buf, h):
     ).astype(jnp.float32)[:, 0]
     a = -jnp.exp(p["A_log"])
     da = jnp.exp(dt[..., None] * a)  # (B, di, N)
-    dbx = (dt * xi1[:, 0].astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[:, 0][:, None, :]
+    dbx = (dt * xi1[:, 0].astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[:, 0][
+        :, None, :
+    ]
     h = da * h + dbx
     y = jnp.einsum("bin,bn->bi", h, cmat.astype(jnp.float32)[:, 0])
     y = (y + p["D"] * xi1[:, 0].astype(jnp.float32)).astype(x.dtype)

@@ -95,7 +95,12 @@ def group_by(key_cols: list[np.ndarray]):
     """
     n = len(key_cols[0]) if key_cols else 0
     if n == 0:
-        return [c[:0] for c in key_cols], np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(1, np.int64)
+        return (
+            [c[:0] for c in key_cols],
+            np.zeros(0, np.int64),
+            np.zeros(0, np.int64),
+            np.zeros(1, np.int64),
+        )
     order = np.lexsort(tuple(reversed([np.asarray(c) for c in key_cols])))
     sorted_cols = [np.asarray(c)[order] for c in key_cols]
     neq = np.zeros(n, dtype=bool)

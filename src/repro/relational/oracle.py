@@ -19,9 +19,9 @@ def _nat_join(left_vars, left_rows, right_vars, right_rows):
         index.setdefault(tuple(r[i] for i in ri), []).append([r[i] for i in re])
     out_vars = list(left_vars) + rv_extra
     out = []
-    for l in left_rows:
-        for extra in index.get(tuple(l[i] for i in li), ()):  # noqa: E741
-            out.append(list(l) + extra)
+    for lrow in left_rows:
+        for extra in index.get(tuple(lrow[i] for i in li), ()):
+            out.append(list(lrow) + extra)
     return out_vars, out
 
 
@@ -31,7 +31,9 @@ def join_oracle(query: Query, relations: dict[str, Relation]) -> set | list:
     vars_, rows = None, None
     for atom in query.atoms:
         rel = relations[atom.alias]
-        r_rows = [list(t) for t in zip(*(rel.columns[v] for v in atom.vars))] if rel.num_rows else []
+        r_rows = (
+            [list(t) for t in zip(*(rel.columns[v] for v in atom.vars))] if rel.num_rows else []
+        )
         r_rows = [[int(x) for x in t] for t in r_rows]
         if vars_ is None:
             vars_, rows = list(atom.vars), r_rows

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import ModelConfig, apply_model, decode_step, init_cache
+from repro.models.transformer import ModelConfig, decode_step, init_cache
 from repro.serve.paged_kv import PagedAllocator
 
 

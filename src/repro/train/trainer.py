@@ -5,7 +5,6 @@ lowers on the production mesh and examples/train_lm.py runs on CPU.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -42,7 +42,9 @@ def test_forward_and_train_step(arch):
     assert not np.allclose(np.asarray(d0), np.asarray(d1))
 
 
-@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mixtral-8x22b", "jamba-1.5-large-398b", "rwkv6-1.6b"])
+@pytest.mark.parametrize(
+    "arch", ["qwen2-1.5b", "mixtral-8x22b", "jamba-1.5-large-398b", "rwkv6-1.6b"]
+)
 def test_decode_matches_prefill(arch):
     spec = get_arch(arch)
     import dataclasses

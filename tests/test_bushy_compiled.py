@@ -1,0 +1,206 @@
+"""Fully-compiled bushy plans: every stage chained on device.
+
+The contract under test (PR 4): compiled_free_join runs the *whole* stage
+chain — non-root stages included — inside one AdaptiveExecutor call, with
+zero eager-engine invocations; results match the eager engine exactly
+(count and agg=None materialization), including zero-row stage outputs and
+stages whose output overflows its planned capacity.
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core import compiled_free_join, free_join, optimize, to_sorted_tuples
+from repro.core.api import _stage_plans
+from repro.core.capacity import plan_chain_capacities
+from repro.core.compiled import AdaptiveExecutor
+from repro.core.engine import execute as eager_execute
+from repro.core.optimizer import Stats
+from repro.core.plan import BinaryPlan
+from repro.relational.relation import Relation
+from repro.relational.schema import Atom, Query
+from tests.conftest import rand_rel
+
+
+def two_stage_case(rng, n=40, dom=8):
+    """((A ⋈ B) ⋈ (C ⋈ D)): one non-root stage + the root."""
+    q = Query(
+        [Atom("A", ("x", "y")), Atom("B", ("y", "z")), Atom("C", ("z", "w")), Atom("D", ("w", "u"))]
+    )
+    tree = BinaryPlan(BinaryPlan(q.atoms[0], q.atoms[1]), BinaryPlan(q.atoms[2], q.atoms[3]))
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, n, dom) for a in q.atoms}
+    return q, tree, rels
+
+
+def three_stage_case(rng, n=30, dom=12):
+    """(((R0 R1)(R2 R3))(R4 R5)) path: two non-root stages + the root."""
+    atoms = [Atom(f"R{i}", (f"v{i}", f"v{i + 1}")) for i in range(6)]
+    q = Query(atoms)
+    tree = BinaryPlan(
+        BinaryPlan(BinaryPlan(atoms[0], atoms[1]), BinaryPlan(atoms[2], atoms[3])),
+        BinaryPlan(atoms[4], atoms[5]),
+    )
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, n, dom) for a in q.atoms}
+    return q, tree, rels
+
+
+def four_stage_case(rng, n=12, dom=8):
+    """The Sec 5.4 hijacked-optimizer regime: a balanced bushy tree over an
+    8-atom star (three non-root stages + the root)."""
+    q = Query([Atom(f"S{i}", ("h", f"s{i}")) for i in range(8)])
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, n, dom) for a in q.atoms}
+    tree = optimize(q, rels, bad=True)
+    return q, tree, rels
+
+
+CASES = [two_stage_case, three_stage_case, four_stage_case]
+
+
+# ---- parity: eager vs fully-compiled on multi-stage plans -----------------
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_bushy_count_parity(case, rng):
+    q, tree, rels = case(rng)
+    assert len(tree.decompose()) >= 2, "the plan must actually be bushy"
+    want = free_join(q, rels, tree, agg="count")
+    info = {}
+    got = compiled_free_join(q, rels, tree, agg="count", info=info)
+    assert got == want
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_bushy_materialization_parity(case, rng):
+    q, tree, rels = case(rng)
+    want = free_join(q, rels, tree, agg=None)
+    got = compiled_free_join(q, rels, tree, agg=None)
+    assert to_sorted_tuples(got, q.head) == to_sorted_tuples(want, q.head)
+
+
+def test_bushy_bag_multiplicity_across_stage(rng):
+    """Duplicate rows inside a stage input must carry their multiplicity
+    through the stage buffer into the root (weighted StaticTrie mult)."""
+    q = Query(
+        [Atom("A", ("x", "y")), Atom("B", ("y", "z")), Atom("C", ("z", "w")), Atom("D", ("w", "u"))]
+    )
+    tree = BinaryPlan(BinaryPlan(q.atoms[0], q.atoms[1]), BinaryPlan(q.atoms[2], q.atoms[3]))
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 30, 6) for a in q.atoms}
+    # triplicate one C row: every join result through it counts three times
+    c = rels["C"].columns
+    rels["C"] = Relation("C", {k: np.concatenate([v, v[:1], v[:1]]) for k, v in c.items()})
+    want = free_join(q, rels, tree, agg="count")
+    assert compiled_free_join(q, rels, tree, agg="count") == want
+    got = compiled_free_join(q, rels, tree, agg=None)
+    assert to_sorted_tuples(got, q.head) == to_sorted_tuples(
+        free_join(q, rels, tree, agg=None), q.head
+    )
+
+
+# ---- the CI acceptance assertion: one call chain, zero eager work ---------
+
+
+def test_bushy_single_call_chain_zero_eager(rng, monkeypatch):
+    """A 3-stage bushy plan issues exactly one AdaptiveExecutor call chain
+    and never touches the eager engine."""
+    q, tree, rels = three_stage_case(rng)
+    assert len(tree.decompose()) == 3
+    want = free_join(q, rels, tree, agg="count")
+
+    eager_calls = [0]
+
+    def counting_execute(*a, **k):
+        eager_calls[0] += 1
+        return eager_execute(*a, **k)
+
+    import repro.core.api as api_mod
+
+    monkeypatch.setattr(api_mod.engine, "execute", counting_execute)
+    info = {}
+    got = compiled_free_join(q, rels, tree, agg="count", info=info)
+    assert got == want
+    assert eager_calls[0] == 0, "the compiled path must never invoke the eager engine"
+    assert info["runner"].calls == 1, "one call chain for the whole bushy plan"
+    # the hybrid baseline, by contrast, runs the eager engine per non-root stage
+    assert compiled_free_join(q, rels, tree, agg="count", chain_stages=False) == want
+    assert eager_calls[0] == 2
+
+
+# ---- zero-row stage output ------------------------------------------------
+
+
+def test_bushy_zero_row_stage_output(rng):
+    """A stage whose own join is empty (C and D share no w values) must
+    flow an all-pad buffer through the chain: count 0, no output rows."""
+    q, tree, rels = two_stage_case(rng)
+    rels["C"] = Relation("C", {"z": np.arange(10), "w": np.arange(10)})
+    rels["D"] = Relation("D", {"w": np.arange(100, 110), "u": np.arange(10)})
+    assert free_join(q, rels, tree, agg="count") == 0
+    assert compiled_free_join(q, rels, tree, agg="count") == 0
+    got = compiled_free_join(q, rels, tree, agg=None)
+    assert to_sorted_tuples(got, q.head) == []
+
+
+def test_bushy_empty_input_relation_in_stage(rng):
+    q, tree, rels = two_stage_case(rng)
+    rels["D"] = Relation("D", {"w": np.zeros(0, np.int64), "u": np.zeros(0, np.int64)})
+    assert compiled_free_join(q, rels, tree, agg="count") == 0
+    got = compiled_free_join(q, rels, tree, agg=None)
+    assert to_sorted_tuples(got, q.head) == []
+
+
+# ---- a stage output overflowing its planned capacity ----------------------
+
+
+def test_bushy_stage_overflow_forces_adaptive_retry(rng):
+    """Undersize only stage 0's buffers: the chain must report that stage's
+    needs, grow exactly the offending nodes, and converge to parity — the
+    untouched stages keep their planned capacities."""
+    q, tree, rels = three_stage_case(rng)
+    want = free_join(q, rels, tree, agg="count")
+    stages = _stage_plans(q, tree)
+    chain = plan_chain_capacities(stages, stats=Stats(rels))
+    s0 = chain.stages[0]
+    tiny = replace(
+        s0,
+        capacities=(64,) * len(s0.capacities),
+        compact_to=(None,) * len(s0.capacities),
+    )
+    undersized = replace(chain, stages=(tiny,) + chain.stages[1:])
+    ex = AdaptiveExecutor(tuple(stages), undersized, agg="count")
+    assert ex.run_relations(rels) == want
+    assert ex.retries > 0, "a forced stage overflow must actually retry"
+    assert max(ex.cap_plan.stages[0].capacities) > 64
+    for k in range(1, len(chain.stages)):
+        assert ex.cap_plan.stages[k].capacities == chain.stages[k].capacities
+    # steady state: the grown chain is cached — a second call never re-runs
+    retries, compiles = ex.retries, ex.compiles
+    assert ex.run_relations(rels) == want
+    assert ex.retries == retries and ex.compiles == compiles
+
+
+def test_bushy_chain_plan_grow_to_identity_when_unchanged(rng):
+    q, tree, rels = two_stage_case(rng)
+    chain = plan_chain_capacities(_stage_plans(q, tree), stats=Stats(rels))
+    # growing a disabled compaction target is a no-op and returns self
+    assert chain.grow_to(0, 0, 10**6, compaction=True) is chain or (
+        chain.stages[0].compact_to[0] is not None
+    )
+    grown = chain.grow_to(0, 0, 10**6)
+    assert grown is not chain
+    assert grown.stages[0].capacities[0] >= 10**6
+    assert grown.stages[1:] == chain.stages[1:]
+
+
+# ---- hybrid baseline stays available --------------------------------------
+
+
+@pytest.mark.parametrize("case", CASES[:2])
+def test_hybrid_baseline_matches_chain(case, rng):
+    q, tree, rels = case(rng)
+    want = free_join(q, rels, tree, agg="count")
+    assert compiled_free_join(q, rels, tree, agg="count", chain_stages=False) == want
+    got = compiled_free_join(q, rels, tree, agg=None, chain_stages=False)
+    assert to_sorted_tuples(got, q.head) == to_sorted_tuples(
+        free_join(q, rels, tree, agg=None), q.head
+    )

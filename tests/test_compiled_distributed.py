@@ -19,7 +19,6 @@ from repro.core.compiled import count_query
 from repro.core.distributed import (
     distributed_join_host,
     hypercube_shares,
-    partition,
     spmd_count,
 )
 from repro.core.plan import BinaryPlan
@@ -165,6 +164,51 @@ def test_spmd_count_empty_relation(rng):
     mesh = jax.make_mesh((1,), ("data",))
     fj = factor(binary2fj(q.atoms, q))
     assert spmd_count(q, rels, fj, None, mesh) == 0
+
+
+def test_spmd_caches_persist_across_instances(rng):
+    """The hypercube partition (dense device fragments) and the grown
+    CapacityPlan persist process-wide across SpmdCounter instances over the
+    very same relation objects; different relation objects re-partition."""
+    from repro.core.distributed import SpmdCounter
+
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 300, 8) for a in q.atoms}
+    mesh = jax.make_mesh((1,), ("data",))
+    fj = factor(binary2fj(q.atoms, q))
+    # a tiny safety factor undersizes the planned capacities, forcing the
+    # first instance to learn (grow) the plan through the retry loop
+    c1 = SpmdCounter(q, rels, fj, None, mesh, safety=1e-6)
+    want = free_join(q, rels, agg="count")
+    assert c1() == want
+    assert c1.retries >= 1, "the undersized plan must actually grow"
+    # second instance: same relations -> cached fragments + the grown plan,
+    # so it starts overflow-free and never re-partitions
+    c2 = SpmdCounter(q, rels, fj, None, mesh, safety=1e-6)
+    assert c2._dense is c1._dense, "partition must be served from the cache"
+    assert c2.cap_plan == c1.cap_plan, "the grown plan must persist"
+    assert c2() == want
+    assert c2.retries == 0, "a persisted plan re-learns nothing"
+    # fresh relation objects (same content) invalidate the identity check
+    rels2 = {a.alias: Relation(a.alias, dict(rels[a.alias].columns)) for a in q.atoms}
+    c3 = SpmdCounter(q, rels2, fj, None, mesh, safety=1e-6)
+    assert c3._dense is not c1._dense
+    assert c3() == want
+
+
+def test_hypercube_shares_memoized():
+    from repro.core.distributed import _shares_cache
+
+    q = triangle_query()
+    sizes = {"R": 12345, "S": 23456, "T": 34567}
+    first = hypercube_shares(q, sizes, 8)
+    key_count = len(_shares_cache)
+    again = hypercube_shares(q, sizes, 8)
+    assert again == first
+    assert len(_shares_cache) == key_count, "second call must hit the memo"
+    # the memo hands out copies: callers mutating shares can't poison it
+    again["x"] = 99
+    assert hypercube_shares(q, sizes, 8) == first
 
 
 SPMD_SCRIPT = r"""

@@ -41,9 +41,15 @@ def test_clover_skewed_instance(engine):
     n = 30
     ar = np.arange(n, dtype=np.int64)
     rels = {
-        "R": Relation("R", {"x": np.r_[0, np.full(n, 1), np.full(n, 2)], "a": np.r_[0, ar, ar + n]}),
-        "S": Relation("S", {"x": np.r_[0, np.full(n, 2), np.full(n, 3)], "b": np.r_[0, ar, ar + n]}),
-        "T": Relation("T", {"x": np.r_[0, np.full(n, 3), np.full(n, 1)], "c": np.r_[0, ar, ar + n]}),
+        "R": Relation(
+            "R", {"x": np.r_[0, np.full(n, 1), np.full(n, 2)], "a": np.r_[0, ar, ar + n]}
+        ),
+        "S": Relation(
+            "S", {"x": np.r_[0, np.full(n, 2), np.full(n, 3)], "b": np.r_[0, ar, ar + n]}
+        ),
+        "T": Relation(
+            "T", {"x": np.r_[0, np.full(n, 3), np.full(n, 1)], "c": np.r_[0, ar, ar + n]}
+        ),
     }
     q = clover_query()
     got = to_sorted_tuples(engine(q, rels), q.head)
@@ -63,7 +69,9 @@ def test_bag_semantics_duplicates(engine):
 
 
 def test_bushy_plan_materialization(rng):
-    q = Query([Atom("R", ("x", "y")), Atom("S", ("y", "z")), Atom("T", ("z", "u")), Atom("U", ("u", "w"))])
+    q = Query(
+        [Atom("R", ("x", "y")), Atom("S", ("y", "z")), Atom("T", ("z", "u")), Atom("U", ("u", "w"))]
+    )
     rels = {a.alias: rand_rel(rng, a.alias, a.vars, 80, 8) for a in q.atoms}
     tree = BinaryPlan(BinaryPlan(q.atoms[0], q.atoms[1]), BinaryPlan(q.atoms[2], q.atoms[3]))
     want = join_oracle(q, rels)
@@ -116,7 +124,9 @@ def test_trie_modes_agree(rng, mode):
 
 
 def test_optimizer_good_and_bad_same_result(rng):
-    q = Query([Atom("A", ("x", "y")), Atom("B", ("y", "z")), Atom("C", ("z", "w")), Atom("D", ("w", "x"))])
+    q = Query(
+        [Atom("A", ("x", "y")), Atom("B", ("y", "z")), Atom("C", ("z", "w")), Atom("D", ("w", "x"))]
+    )
     rels = {a.alias: rand_rel(rng, a.alias, a.vars, 50, 6) for a in q.atoms}
     want = join_oracle(q, rels)
     for bad in (False, True):

@@ -27,7 +27,10 @@ def test_hash_probe_vs_oracle(n, k, q, impl, rng):
 def test_intersect_vs_oracle(m, n, impl, rng):
     b = np.unique(rng.integers(0, 10**5, n).astype(np.int32))
     a = np.concatenate(
-        [b[rng.integers(0, len(b), m // 2 + 1)], rng.integers(10**5, 2 * 10**5, m // 2).astype(np.int32)]
+        [
+            b[rng.integers(0, len(b), m // 2 + 1)],
+            rng.integers(10**5, 2 * 10**5, m // 2).astype(np.int32),
+        ]
     )
     wm, wp = ref.intersect_ref(jnp.asarray(a), jnp.asarray(b))
     gm, gp = ops.intersect_sorted(jnp.asarray(a), jnp.asarray(b), impl=impl)
@@ -42,7 +45,9 @@ def test_csr_expand_vs_oracle(g, f, cap, impl, rng):
     offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
     groups = rng.integers(0, g, f).astype(np.int32)
     wfr, wm, wv, wt = ref.csr_expand_ref(jnp.asarray(offsets), jnp.asarray(groups), cap)
-    gfr, gm, gv, gt = ops.csr_expand_capped(jnp.asarray(offsets), jnp.asarray(groups), cap, impl=impl)
+    gfr, gm, gv, gt = ops.csr_expand_capped(
+        jnp.asarray(offsets), jnp.asarray(groups), cap, impl=impl
+    )
     np.testing.assert_array_equal(np.asarray(gfr), np.asarray(wfr))
     np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
     assert int(gt) == int(wt)

@@ -1,6 +1,5 @@
 """Launch-layer units that don't need 512 devices: sharding rules,
 collective parsers, roofline math, arch/shape eligibility."""
-import numpy as np
 import pytest
 
 from repro.launch.dryrun import collective_bytes, collective_bytes_scaled

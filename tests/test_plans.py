@@ -1,6 +1,4 @@
 """Plan-layer unit tests: binary2fj, factor, validity (paper Figs 9-10)."""
-import pytest
-
 from repro.core.plan import (
     BinaryPlan,
     FreeJoinPlan,
@@ -8,7 +6,6 @@ from repro.core.plan import (
     binary2fj,
     factor,
     gj_plan,
-    linear,
     var_order_from_fj,
 )
 from repro.relational.schema import Atom, Query, clover_query, triangle_query
@@ -27,7 +24,9 @@ def test_factor_clover_matches_paper_optimized_plan():
 
 
 def test_binary2fj_chain_matches_paper_example_4_1():
-    q = Query([Atom("R", ("x", "y")), Atom("S", ("y", "z")), Atom("T", ("z", "u")), Atom("W", ("u", "v"))])
+    q = Query(
+        [Atom("R", ("x", "y")), Atom("S", ("y", "z")), Atom("T", ("z", "u")), Atom("W", ("u", "v"))]
+    )
     fj = binary2fj(q.atoms, q)
     assert str(fj) == "[[R(x,y), S(y)], [S(z), T(z)], [T(u), W(u)], [W(v)]]"
 
@@ -41,7 +40,9 @@ def test_gj_plan_is_all_covers():
 
 def test_invalid_plan_example_3_9_rejected():
     q = clover_query()
-    plan = FreeJoinPlan(q, [[Subatom("R", ("x", "a")), Subatom("S", ("x", "b")), Subatom("T", ("x", "c"))]])
+    plan = FreeJoinPlan(
+        q, [[Subatom("R", ("x", "a")), Subatom("S", ("x", "b")), Subatom("T", ("x", "c"))]]
+    )
     # single node containing everything: S(x,b) needs b which is not fresh-covered
     # by any single subatom... actually R(x,a) doesn't contain b,c -> no cover
     assert not plan.is_valid()
@@ -49,7 +50,9 @@ def test_invalid_plan_example_3_9_rejected():
 
 def test_partitioning_violation_rejected():
     q = clover_query()
-    plan = FreeJoinPlan(q, [[Subatom("R", ("x",))], [Subatom("S", ("x", "b"))], [Subatom("T", ("x", "c"))]])
+    plan = FreeJoinPlan(
+        q, [[Subatom("R", ("x",))], [Subatom("S", ("x", "b"))], [Subatom("T", ("x", "c"))]]
+    )
     assert not plan.is_valid()  # R(a) missing
 
 
@@ -66,7 +69,9 @@ def test_factored_plan_always_valid_random_chains(rng):
 
 
 def test_bushy_decompose():
-    q = Query([Atom("R", ("x", "y")), Atom("S", ("y", "z")), Atom("T", ("z", "u")), Atom("U", ("u", "w"))])
+    q = Query(
+        [Atom("R", ("x", "y")), Atom("S", ("y", "z")), Atom("T", ("z", "u")), Atom("U", ("u", "w"))]
+    )
     tree = BinaryPlan(BinaryPlan(q.atoms[0], q.atoms[1]), BinaryPlan(q.atoms[2], q.atoms[3]))
     stages = tree.decompose()
     assert len(stages) == 2

@@ -85,9 +85,17 @@ def test_factor_preserves_validity_and_semantics(data):
 )
 @settings(max_examples=50, deadline=None)
 def test_hashtable_probe_total(keys, queries):
-    cols = [np.array([k[i] for k in keys], np.int64) for i in range(2)] if keys else [np.zeros(0, np.int64)] * 2
+    cols = (
+        [np.array([k[i] for k in keys], np.int64) for i in range(2)]
+        if keys
+        else [np.zeros(0, np.int64)] * 2
+    )
     t = HashTable(cols)
-    qcols = [np.array([k[i] for k in queries], np.int64) for i in range(2)] if queries else [np.zeros(0, np.int64)] * 2
+    qcols = (
+        [np.array([k[i] for k in queries], np.int64) for i in range(2)]
+        if queries
+        else [np.zeros(0, np.int64)] * 2
+    )
     res = t.probe(qcols)
     lookup = {k: i for i, k in enumerate(keys)}
     for j, qk in enumerate(queries):
@@ -99,7 +107,11 @@ def test_hashtable_probe_total(keys, queries):
 )
 @settings(max_examples=50, deadline=None)
 def test_group_by_partitions(rows):
-    cols = [np.array([r[i] for r in rows], np.int64) for i in range(2)] if rows else [np.zeros(0, np.int64)] * 2
+    cols = (
+        [np.array([r[i] for r in rows], np.int64) for i in range(2)]
+        if rows
+        else [np.zeros(0, np.int64)] * 2
+    )
     uniq, gid, order, offsets = group_by(cols)
     n = len(rows)
     assert len(order) == n and offsets[-1] == n

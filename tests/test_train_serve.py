@@ -147,7 +147,11 @@ print("COMP_OK")
 
 @pytest.mark.slow
 def test_compressed_psum_subprocess():
-    env = {**os.environ, "XLA_FLAGS": "--xla_force_host_platform_device_count=4", "PYTHONPATH": "src"}
+    env = {
+        **os.environ,
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+        "PYTHONPATH": "src",
+    }
     res = subprocess.run([sys.executable, "-c", COMPRESSION_SCRIPT], capture_output=True,
                          text=True, env=env, timeout=600,
                          cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
@@ -186,7 +190,9 @@ def test_serve_engine_completes_all_requests():
     params = init_params(jax.random.PRNGKey(0), CFG)
     eng = ServeEngine(params, CFG, slots=3, max_len=32)
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i, prompt=rng.integers(0, 64, 3).astype(np.int32), max_new=4) for i in range(5)]
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, 64, 3).astype(np.int32), max_new=4) for i in range(5)
+    ]
     for r in reqs:
         eng.submit(r)
     eng.run()
@@ -210,7 +216,9 @@ def test_paged_allocator_lookup_and_release():
 def test_corpus_selection_relational():
     n = 1000
     rng = np.random.default_rng(0)
-    docs = Relation("Docs", {"doc": np.arange(n), "shard": rng.integers(0, 4, n), "lang": rng.integers(0, 3, n)})
+    docs = Relation(
+        "Docs", {"doc": np.arange(n), "shard": rng.integers(0, 4, n), "lang": rng.integers(0, 3, n)}
+    )
     quality = Relation("Quality", {"doc": np.arange(n), "score": rng.integers(0, 100, n)})
     dedup = Relation("Dedup", {"doc": np.arange(n), "canonical": np.arange(n)})
     keep = select_corpus_samples(docs, quality, dedup, min_quality=50)
