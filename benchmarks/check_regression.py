@@ -1,0 +1,87 @@
+"""CI perf gate: diff a bench-smoke latest.csv against the smoke baseline
+recorded in BENCH_join_perf.json and fail on a >2x regression of any
+recorded row.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      benchmarks/results/latest.csv BENCH_join_perf.json
+  PYTHONPATH=src python -m benchmarks.check_regression ... --update
+
+--update re-records the baseline from the given CSV (run it after an
+intentional perf change, alongside regenerating the full-scale record).
+Only rows present in the baseline are checked, so new benchmarks don't
+fail the gate until a baseline is recorded for them. The factor (default
+2x, override BENCH_REGRESSION_FACTOR) is deliberately loose: CI runners
+are noisy and slower than dev machines — the gate exists to catch
+order-of-magnitude slips (an accidentally disabled cache, a rebuild
+sneaking back into the warm path), not single-digit drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def read_csv(path: str) -> dict[str, float]:
+    rows: dict[str, float] = {}
+    with open(path) as f:
+        header = f.readline()
+        assert header.startswith("name,"), f"unexpected CSV header: {header!r}"
+        for line in f:
+            parts = line.rstrip("\n").split(",", 2)
+            if len(parts) >= 2 and parts[0]:
+                rows[parts[0]] = float(parts[1])
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("csv", help="bench-smoke latest.csv")
+    ap.add_argument("record", help="BENCH_join_perf.json with a smoke_baseline section")
+    ap.add_argument(
+        "--update", action="store_true", help="re-record the baseline from the CSV"
+    )
+    ap.add_argument(
+        "--prefix", default="joinperf.", help="only gate rows with this name prefix"
+    )
+    args = ap.parse_args()
+    rows = read_csv(args.csv)
+    with open(args.record) as f:
+        record = json.load(f)
+    if args.update:
+        record["smoke_baseline"] = {
+            k: round(v, 1) for k, v in sorted(rows.items()) if k.startswith(args.prefix)
+        }
+        with open(args.record, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"recorded {len(record['smoke_baseline'])} baseline rows")
+        return 0
+    baseline = record.get("smoke_baseline", {})
+    if not baseline:
+        print("no smoke_baseline recorded; nothing to gate")
+        return 0
+    factor = float(os.environ.get("BENCH_REGRESSION_FACTOR", "2.0"))
+    failed = []
+    for name, base_us in sorted(baseline.items()):
+        got = rows.get(name)
+        if got is None:
+            failed.append(f"{name}: missing from {args.csv} (baseline {base_us:.0f}us)")
+            continue
+        ratio = got / base_us
+        status = "FAIL" if ratio > factor else "ok"
+        print(f"{status:>4}  {name:<42} {got:>12.0f}us  baseline {base_us:>10.0f}us  {ratio:5.2f}x")
+        if ratio > factor:
+            failed.append(f"{name}: {got:.0f}us > {factor:.1f}x baseline {base_us:.0f}us")
+    if failed:
+        print(f"\n{len(failed)} row(s) regressed more than {factor:.1f}x:", file=sys.stderr)
+        for f_ in failed:
+            print("  " + f_, file=sys.stderr)
+        return 1
+    print(f"\nall {len(baseline)} recorded rows within {factor:.1f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

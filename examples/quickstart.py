@@ -77,7 +77,7 @@ def main():
     # the compiled path: same triangle count, static shapes, jit. The
     # capacity planner sizes every frontier buffer from the optimizer's
     # estimates capped by the AGM bound — no manual capacities — and the
-    # adaptive runner doubles any buffer that still overflows and retries.
+    # adaptive runner grows any buffer that still overflows and retries.
     rng = np.random.default_rng(0)
     q = triangle_query()
     rels = {
@@ -89,14 +89,21 @@ def main():
     t0 = time.perf_counter()
     c = compiled_free_join(q, rels, agg="count", info=info)
     t1 = time.perf_counter()
-    # steady state: reuse the runner — its executor cache skips the compile
-    t2 = time.perf_counter()
-    c2 = info["runner"].run_relations(rels)
-    t3 = time.perf_counter()
-    print(f"compiled    : count={c}  ({(t1 - t0) * 1e3:.1f} ms incl. compile)")
-    print(f"warm rerun  : count={c2}  ({(t3 - t2) * 1e3:.1f} ms)")
+    print(f"cold        : count={c}  ({(t1 - t0) * 1e3:.1f} ms incl. build + compile)")
+    # steady state — build once, probe many: the cold call uploaded the
+    # columns, built every trie (segmented radix sort + lazy hash tables),
+    # compiled the probe program, and cached all three process-wide. A
+    # repeated identical call is pure probe work: zero np.unique, zero trie
+    # builds, zero recompiles — the serving loop below converges to the
+    # warm floor after the first iteration.
+    for i in range(3):
+        t2 = time.perf_counter()
+        c2 = compiled_free_join(q, rels, agg="count", info=info)
+        t3 = time.perf_counter()
+        print(f"warm call {i} : count={c2}  ({(t3 - t2) * 1e3:.1f} ms, probe only)")
+        assert c2 == c
     print(f"plan        : {info['cap_plan']}  retries={info['retries']}")
-    assert c == c2 == free_join(q, rels, agg="count")
+    assert c == free_join(q, rels, agg="count")
 
     # bushy plans, fully compiled: a binary plan tree with a join on its
     # right side decomposes into stages (Sec 2.2). The compiled path runs

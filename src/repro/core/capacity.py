@@ -39,25 +39,48 @@ except Exception:  # pragma: no cover
     _linprog = None
 
 
+# AGM bounds are pure functions of (hyperedges, sizes) and each linprog call
+# costs host milliseconds; planning calls agm_bound once per node *and* once
+# per probe prefix, so a repeated query re-derives identical bounds every
+# call. Memoized process-wide (bounded), the per-call planning pass costs
+# dict lookups — part of dropping build/planning cost out of warm calls.
+_agm_cache: dict[tuple, float] = {}
+_AGM_CACHE_MAX = 4096
+
+
 def agm_bound(edges: dict[str, tuple[str, ...]], sizes: dict[str, float]) -> float:
     """AGM bound of a join: min over fractional edge covers x of
     prod_R |R|^x_R, via the LP  min sum x_R log|R|  s.t. every variable is
     covered. Falls back to a greedy integral cover (still a valid upper
-    bound, just looser) when scipy is unavailable."""
+    bound, just looser) when scipy is unavailable. Memoized on the exact
+    (edges, sizes) contents."""
     aliases = [a for a, vs in edges.items() if vs]
     variables = sorted({v for a in aliases for v in edges[a]})
     if not aliases or not variables:
         return 1.0
+    memo_key = (
+        tuple(sorted((a, tuple(edges[a])) for a in aliases)),
+        tuple(sorted((a, float(sizes[a])) for a in aliases)),
+    )
+    hit = _agm_cache.get(memo_key)
+    if hit is not None:
+        return hit
     logs = [math.log(max(1.0, sizes[a])) for a in aliases]
+    bound = None
     if _linprog is not None:
         a_ub = [[-1.0 if v in edges[a] else 0.0 for a in aliases] for v in variables]
         res = _linprog(logs, A_ub=a_ub, b_ub=[-1.0] * len(variables), bounds=(0, 1), method="highs")
         if res.status == 0:
-            return float(math.exp(res.fun))
-    cover = 0.0
-    for v in variables:  # greedy integral cover: cheapest edge per variable
-        cover += min(lg for a, lg in zip(aliases, logs) if v in edges[a])
-    return float(math.exp(min(cover, sum(logs))))
+            bound = float(math.exp(res.fun))
+    if bound is None:
+        cover = 0.0
+        for v in variables:  # greedy integral cover: cheapest edge per variable
+            cover += min(lg for a, lg in zip(aliases, logs) if v in edges[a])
+        bound = float(math.exp(min(cover, sum(logs))))
+    if len(_agm_cache) >= _AGM_CACHE_MAX:
+        _agm_cache.clear()
+    _agm_cache[memo_key] = bound
+    return bound
 
 
 def _round_block(x: float, block: int) -> int:

@@ -2,90 +2,94 @@
 
 The eager engine (engine.py) is the paper-faithful reproduction; this module
 re-expresses the same plan execution with fully static shapes so it lowers
-under jit on a device mesh:
+under jit on a device mesh. Since PR 5 the compiled path is split into two
+programs with an explicit contract between them:
 
-* Tries are built by one lexsort over the consumed level vars + boundary
-  flags + segment sums — all arrays keep the base relation's static length N
-  (group counts are dynamic *values*, never dynamic *shapes*). COLT's
-  "build only what the plan consumes" survives statically: only levels the
-  plan probes get tables, and a relation that is only iterated at a single
-  level skips the build entirely.
-* The frontier is a capacity-bounded buffer with a valid mask. Iteration is
-  `expand_counted` (prefix-sum + binary-search addressing — the csr_expand
-  kernel); probing is the hash_probe kernel. When the planner predicts a
-  node's probes kill most lanes, the frontier is *compacted* (prefix-sum
-  scatter, kernels/compact.py) into a smaller buffer so later nodes pay for
-  live rows, not for the largest buffer ever allocated.
-* Bag semantics via a mult column; factorized counting is decided statically
-  from the plan (cover at its last level whose vars are never used again).
+* The BUILD program (build_trie / StaticTrie) turns a relation's columns
+  into a column-oriented lazy trie: one sort over the consumed level vars +
+  boundary flags + segment sums — all arrays keep the base relation's
+  static length N (group counts are dynamic *values*, never dynamic
+  *shapes*). COLT's "build only what the plan consumes" survives statically
+  twice over: only levels the plan probes get hash tables, and a relation
+  that is only iterated at a single level skips the build entirely. The
+  sort itself is the segmented radix kernel (kernels/radix_sort.py):
+  level-by-level LSD passes inside the parent groups, with pass count set
+  by each var's key width — jnp.lexsort remains only as the fallback for
+  keys that may be negative (SPMD pad sentinels, weighted stage buffers).
+  A StaticTrie is a registered pytree, so a prebuilt trie crosses the jit
+  boundary as a plain *input* of device arrays.
 
-Bushy plans run fully compiled (Sec 2.2: a binary plan decomposes into
-stages whose outputs feed later tries). make_chain_executor strings every
-stage's executor into ONE on-device program: a non-root stage runs with
+* The PROBE program (make_executor / make_chain_executor) takes tries —
+  prebuilt pytrees or raw column dicts, per alias — and runs the plan over
+  a capacity-bounded frontier. A raw dict is built in-graph (the cold
+  path, and the only path for weighted stage buffers, which exist only
+  mid-chain); a prebuilt trie contributes zero build work to the call.
+  Iteration is expand_counted (prefix-sum + binary-search addressing);
+  probing is the hash_probe kernel; predicted-dead frontiers are compacted
+  (kernels/compact.py). Bag semantics via a mult column; factorized
+  counting decided statically from the plan.
+
+* The cross-call TRIE CACHE (TrieCache / TRIE_CACHE) amortizes builds
+  across calls, the COLT move that makes steady-state serving pay probe
+  cost only. It is keyed by relation identity (weakref registry — entries
+  die with their relations, see core/relcache.py) + level layout + budget,
+  revalidated per column by host-array identity, and lazy per level: a
+  schedule that probes a level the cached build skipped adds exactly that
+  level's table; a level sequence prefix-compatible with a cached one
+  reuses the cached sort order and pays no sorting pass for the shared
+  prefix. Weighted (stage-output) tries are never cached: their rows are
+  padded frontier lanes of one specific run, so reuse across runs would
+  serve stale intermediates.
+
+Bushy plans run fully compiled (Sec 2.2): make_chain_executor strings every
+stage's executor into ONE on-device program — a non-root stage runs with
 agg=None, its output columns stay on device as a padded buffer (invalid
 lanes stamped PAD_KEY with multiplicity 0), and the next stage builds a
-*weighted* StaticTrie straight from that buffer — mult-0 pad rows weigh
-nothing in every group aggregate, so no host materialization, no eager
-engine, no round-trips. This is the unification the paper argues for: the
-binary-join-shaped stages and the WCOJ root share one execution substrate.
+*weighted* StaticTrie straight from that buffer, in-graph.
 
 The shared-driver contract (one planning pass serves the local *and* the
 distributed compiled paths — api.compiled_free_join and
 distributed.spmd_count are both thin drivers over the same stack):
 
-* The driver builds one optimizer.Stats cache (one np.unique per referenced
-  base column) and one StaticSchedule per stage (one plan walk each), and
-  threads them through optimize -> capacity.plan_chain_capacities ->
-  optimizer.estimate_prefixes -> make_executor. Each schedule rides on its
-  stage's CapacityPlan so every later executor build reuses it. Stage
-  output statistics are *estimated* (optimizer.StageStats) — the chain
-  never materializes a stage on the host just to count it.
-* capacity.plan_capacities derives a CapacityPlan — per-node expansion
-  capacities plus compaction targets — from the per-prefix cardinality
-  estimates capped by the AGM bound; plan_chain_capacities does it for a
-  whole stage chain, squeezing each stage's output buffer (the next trie's
-  static width) at a compact_output point. No manual capacities. The
-  distributed driver feeds per-shard statistics instead (sizes and
-  distinct counts shrunk by the hypercube shares); nothing else changes.
+* The driver builds one optimizer.Stats cache and one StaticSchedule per
+  stage and threads them through optimize -> capacity.plan_chain_capacities
+  -> optimizer.estimate_prefixes -> make_executor. On a warm call the
+  costly parts of that pass disappear: distinct counts come from the
+  weakref registry (zero np.unique), AGM bounds from a memo, and the whole
+  runner — capacity plan and compiled executors — from api._runner_cache.
+  Plan *enumeration* (optimize's greedy search, pure host arithmetic over
+  cached stats) still runs per call, because the runner key is derived
+  from the chosen plan.
 * make_executor builds the jit-able executor for one capacity vector.
-  Buffer pressure is reported per node as *required totals*, never silently
-  and never as mere bits: agg="count" returns (count, need_expand,
-  need_compact); agg=None returns (bound columns padded to the final
-  capacity, valid mask, mult, need_expand, need_compact). need_expand[i] is
-  the lane count node i's expansion actually required, need_compact[i] the
-  live lane count at its compact point; node i overflowed iff the need
-  exceeds its capacity (resp. compaction target), and the need tells the
-  retry loop the exact capacity to jump to.
-* AdaptiveExecutor drives the whole chain (a single plan is a chain of
-  one) in an overflow-retry loop: on any stage's overflow it grows exactly
-  the offending node's capacity (or compaction target) straight to the
-  reported need (grow_to — one retry, not a geometric ladder) and re-runs,
-  caching one compiled executor per capacity-vector chain. With
-  tighten=True (the api driver's default) a successful run also *shrinks*
-  any buffer that ran more than twice oversized down to its measured need
-  and re-runs once — steady-state traffic pays for measured frontiers,
-  never recompiles, and never overflows, because the learned plan is
-  remembered.
+  Buffer pressure is reported per node as *required totals*: agg="count"
+  returns (count, need_expand, need_compact); agg=None returns (bound
+  columns, valid mask, mult, need_expand, need_compact). Node i overflowed
+  iff the need exceeds its capacity, and the need is the exact capacity the
+  retry loop should jump to.
+* AdaptiveExecutor drives the whole chain in an overflow-retry loop (grow
+  exactly the offending node straight to its reported need; tighten=True
+  also shrinks >2x-oversized buffers to measured needs once), caching one
+  compiled executor per capacity-vector chain. run_relations is the warm
+  serving surface: device uploads, built tries, and planning statistics all
+  come from the registry, so a retry or tighten re-run recompiles the probe
+  program but never rebuilds a trie.
 * Zero-row relations are handled natively: an empty relation builds a
   StaticTrie whose every frontier expansion yields zero live lanes and
-  whose probes match nothing, so drivers need no host-side empty gate. An
-  empty *stage output* is the weighted-trie analogue: an all-pad buffer
-  whose total weight is zero.
+  whose probes match nothing, so drivers need no host-side empty gate.
 
 make_count_fn/count_query keep the original count-only surface (manual
-capacities, scalar overflow bit) for benchmarks and dry runs;
-distributed.spmd_count uses make_executor directly and runs the grow/retry
-loop *outside* the shard_map collective.
+capacities, scalar overflow bit) for benchmarks and dry runs.
 """
 from __future__ import annotations
 
-import weakref
-from dataclasses import dataclass
+import functools
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import relcache
 from repro.core.plan import FreeJoinPlan
 from repro.kernels import ops
 
@@ -147,6 +151,16 @@ def _static_schedule(plan: FreeJoinPlan) -> StaticSchedule:
 class StaticTrie:
     """Sort-based trie with static shapes (see module docstring).
 
+    Constructing one IS the build program; a built instance is a registered
+    pytree of device arrays, so it can be returned from a jit'd build and
+    fed to a jit'd probe program as an ordinary input. `key_bits` (one
+    width per level var, in level order) routes the sort to the segmented
+    radix kernel; None, an empty relation, or a weighted build fall back to
+    jnp.lexsort (weighted/pad keys can be negative or PAD_KEY-wide).
+    `init_order`/`presorted` seed the sort with a cached permutation
+    already sorted by the first `presorted` level vars (TrieCache's
+    prefix-compatible order sharing).
+
     `mult` (optional) marks a *weighted* trie built from another stage's
     padded output buffer: row i carries multiplicity mult[i] >= 0, and rows
     with mult 0 are padding (dead executor lanes) that must contribute
@@ -154,9 +168,7 @@ class StaticTrie:
     counts (for last-level enumeration addressing) and mult sums (for
     factorized counting and bag multiplicity) — and the executor folds the
     per-row mult in (and kills mult-0 lanes) whenever it enumerates physical
-    rows. Pad rows carry the PAD_KEY sentinel on every column so they die on
-    the first probe; correctness never rests on the sentinel, only on the
-    zero weight."""
+    rows."""
 
     def __init__(
         self,
@@ -165,8 +177,13 @@ class StaticTrie:
         impl: str,
         budget: int = 32,
         mult: jnp.ndarray | None = None,
+        key_bits: tuple[int, ...] | None = None,
+        init_order: jnp.ndarray | None = None,
+        presorted: int = 0,
     ):
         self.impl = impl
+        self.budget = budget
+        self.lops = lops
         self.L = len(lops.levels)
         self.levels = lops.levels
         some = next(iter(cols.values()))
@@ -184,10 +201,24 @@ class StaticTrie:
         self.mult_col = None if mult is None else mult.astype(jnp.int32)
         self.total_mult = None if mult is None else jnp.sum(self.mult_col)
         self.trivial = self.L == 1 and not lops.probed[0]
+        self.order = None
+        self.sorted_cols = None
+        self.g = self.kpos = None
+        self.child_base = self.child_counts = self.row_count = None
+        self.row_weight = self.tables = None
         if self.trivial:  # pure cover: iterate the base table, zero build
             return
         all_vars = [v for lv in lops.levels for v in lv]
-        order = jnp.lexsort(tuple(self.cols[v] for v in reversed(all_vars)))
+        if key_bits is not None and not self.empty and mult is None:
+            order = ops.segmented_sort(
+                [self.cols[v] for v in all_vars],
+                tuple(key_bits),
+                impl=impl,
+                init_order=init_order,
+                presorted=presorted,
+            )
+        else:
+            order = jnp.lexsort(tuple(self.cols[v] for v in reversed(all_vars)))
         self.order = order.astype(jnp.int32)
         sc = {v: self.cols[v][order] for v in all_vars}
         self.sorted_cols = sc
@@ -218,12 +249,85 @@ class StaticTrie:
             self.row_count.append(rcnt)
             if sm is not None:
                 self.row_weight.append(jax.ops.segment_sum(sm, gd1, num_segments=n))
-            if lops.probed[d]:
-                parent = jnp.where(flag, self.g[d], -idx - 2)  # sentinels unique
-                key_rows = jnp.stack([parent] + [jnp.where(flag, sc[v], 0) for v in lv], axis=1)
-                self.tables.append(ops.build_table(key_rows, budget=budget))
-            else:
-                self.tables.append(None)
+            # probed levels get their hash table; one shared construction
+            # with the lazy path (build_level_table), so eagerly- and
+            # lazily-built tables can never drift
+            self.tables.append(self.build_level_table(d, budget) if lops.probed[d] else None)
+
+    # -- pytree protocol: a built trie crosses jit boundaries as an input --
+
+    def tree_flatten(self):
+        children = (
+            self.cols,
+            self.mult_col,
+            self.total_mult,
+            self.order,
+            self.sorted_cols,
+            self.g,
+            self.kpos,
+            self.child_base,
+            self.child_counts,
+            self.row_count,
+            self.row_weight,
+            self.tables,
+        )
+        aux = (self.lops, self.impl, self.budget, self.n, self.empty)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        t = object.__new__(cls)
+        (
+            t.cols,
+            t.mult_col,
+            t.total_mult,
+            t.order,
+            t.sorted_cols,
+            t.g,
+            t.kpos,
+            t.child_base,
+            t.child_counts,
+            t.row_count,
+            t.row_weight,
+            t.tables,
+        ) = children
+        t.lops, t.impl, t.budget, t.n, t.empty = aux
+        t.levels = t.lops.levels
+        t.L = len(t.levels)
+        t.trivial = t.L == 1 and not t.lops.probed[0]
+        return t
+
+    def build_level_table(self, d: int, budget: int | None = None):
+        """Build the depth-d probe table on an already-sorted trie — the
+        lazy-COLT path for a schedule that probes a level the cached build
+        skipped. Device work is exactly one table build; the sort and the
+        group structure are reused."""
+        assert not self.trivial and self.g is not None
+        lv = self.levels[d]
+        n = self.n
+        idx = jnp.arange(n, dtype=jnp.int32)
+        gd1 = self.g[d + 1]
+        flag = jnp.zeros(n, dtype=bool).at[0].set(True)
+        flag = flag.at[1:].set(gd1[1:] != gd1[:-1])
+        parent = jnp.where(flag, self.g[d], -idx - 2)
+        key_rows = jnp.stack(
+            [parent] + [jnp.where(flag, self.sorted_cols[v], 0) for v in lv], axis=1
+        )
+        return ops.build_table(key_rows, budget=budget or self.budget)
+
+    def table_view(self, probed: tuple[bool, ...]) -> "StaticTrie":
+        """A shallow view sharing every array, exposing tables only where
+        `probed` asks — so the executor's input pytree structure depends
+        only on the schedule, not on how many tables the cached build has
+        accumulated."""
+        if self.trivial:
+            return self
+        children, aux = self.tree_flatten()
+        lops, impl, budget, n, empty = aux
+        aux = (replace(lops, probed=tuple(probed)), impl, budget, n, empty)
+        view = self.tree_unflatten(aux, children)
+        view.tables = [t if p else None for t, p in zip(self.tables, probed)]
+        return view
 
     # depth-d group sizes (weighted by mult for stage tries): drives
     # factorized count and last-level probe multiplicity
@@ -291,6 +395,181 @@ class StaticTrie:
         return self.mult_col[rows]
 
 
+jax.tree_util.register_pytree_node(
+    StaticTrie, StaticTrie.tree_flatten, StaticTrie.tree_unflatten
+)
+
+
+def build_trie(
+    cols: dict[str, jnp.ndarray],
+    lops: _LevelOps,
+    *,
+    impl: str = "jnp",
+    budget: int = 32,
+    mult: jnp.ndarray | None = None,
+    key_bits: tuple[int, ...] | None = None,
+    init_order: jnp.ndarray | None = None,
+    presorted: int = 0,
+) -> StaticTrie:
+    """The explicit build step: columns in, a StaticTrie pytree of device
+    arrays out. Traceable — called inside the probe program for raw column
+    dicts and weighted stage buffers, or under its own jit (see
+    _build_trie_jit) by the cross-call cache."""
+    return StaticTrie(
+        cols,
+        lops,
+        impl,
+        budget,
+        mult=mult,
+        key_bits=key_bits,
+        init_order=init_order,
+        presorted=presorted,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lops", "impl", "budget", "key_bits", "presorted")
+)
+def _build_trie_jit(cols, lops, impl, budget, key_bits, init_order, presorted):
+    return build_trie(
+        cols,
+        lops,
+        impl=impl,
+        budget=budget,
+        key_bits=key_bits,
+        init_order=init_order,
+        presorted=presorted,
+    )
+
+
+def device_columns(rel) -> dict[str, jnp.ndarray]:
+    """Registry-cached int32 device upload of a relation's columns: each
+    host column is transferred once per (relation object, column object)
+    and the upload dies with the relation. Replacing a column in
+    rel.columns re-uploads exactly that column (identity check); mutating a
+    numpy array in place is not detectable and not supported — replace the
+    array."""
+    return {
+        v: relcache.memo(
+            relcache.REGISTRY,
+            rel,
+            "dev_cols",
+            v,
+            rel.columns[v],
+            lambda v=v: jnp.asarray(rel.columns[v], jnp.int32),
+        )
+        for v in rel.schema
+    }
+
+
+class TrieCache:
+    """Cross-call StaticTrie cache (see module docstring).
+
+    One entry per (relation object, level layout, impl, budget), held in
+    the weakref registry so it dies with the relation; revalidated per
+    column by host-array identity, so a replaced column rebuilds. Lazy per
+    level: a request probing a level the cached build skipped adds only
+    that level's table (build_level_table); a level-var sequence sharing a
+    prefix with a cached one seeds the sort with the cached order and skips
+    the shared passes. Weighted builds are refused — stage-output tries are
+    one run's padded lanes and must never be served across runs.
+
+    Counters (builds/table_builds/hits/order_shares) are the observable
+    contract the tests lock: a repeated identical call must be all hits.
+    """
+
+    def __init__(self, registry: relcache.RelationRegistry | None = None):
+        self._reg = registry or relcache.REGISTRY
+        self.builds = 0  # full trie builds (sort + structure + tables)
+        self.table_builds = 0  # lazy per-level table additions
+        self.hits = 0  # fully served from cache: zero device work
+        self.order_shares = 0  # builds that reused a cached sort order
+
+    def _key_bits(self, rel, flat_vars) -> tuple[int, ...] | None:
+        """Static per-var key widths for the radix sort, from the host
+        columns (cached per column object). None when any key may be
+        negative — those builds stay on lexsort."""
+        def width_of(host):
+            def compute():
+                if len(host) == 0:
+                    return 1
+                if int(host.min()) < 0:
+                    return None
+                return max(1, int(host.max()).bit_length())
+
+            return compute
+
+        bits = []
+        for v in flat_vars:
+            host = rel.columns[v]
+            w = relcache.memo(self._reg, rel, "key_bits", v, host, width_of(host))
+            if w is None:
+                return None
+            bits.append(w)
+        return tuple(bits)
+
+    def get(
+        self,
+        rel,
+        dev_cols: dict[str, jnp.ndarray],
+        lops: _LevelOps,
+        *,
+        impl: str = "jnp",
+        budget: int = 32,
+        mult=None,
+    ) -> StaticTrie:
+        assert mult is None, "weighted (stage-output) tries are never cached"
+        ns = self._reg.namespace(rel, "tries")
+        flat = tuple(v for lv in lops.levels for v in lv)
+        used = {v: dev_cols[v] for v in flat}
+        trivial = len(lops.levels) == 1 and not lops.probed[0]
+        # trivial-ness is part of the identity: a cover-only (table-less,
+        # order-less) trie must never be served to a schedule that probes
+        key = (lops.levels, impl, budget, trivial)
+        entry = ns.get(key)
+        if entry is not None and all(entry["cols"][v] is used[v] for v in flat):
+            trie: StaticTrie = entry["trie"]
+            missing = [
+                d
+                for d, p in enumerate(lops.probed)
+                if p and not trie.trivial and trie.tables[d] is None
+            ]
+            for d in missing:
+                trie.tables[d] = trie.build_level_table(d, budget)
+                self.table_builds += 1
+            if not missing:
+                self.hits += 1
+            return trie.table_view(lops.probed)
+        # miss: build, seeding the sort with any prefix-compatible cached
+        # order over the same (identical) columns
+        key_bits = self._key_bits(rel, flat)
+        init_order, presorted = None, 0
+        if key_bits is not None and not trivial:
+            for (levels2, _i2, _b2, _t2), e2 in ns.items():
+                donor = e2["trie"]
+                if donor.order is None:
+                    continue
+                flat2 = tuple(v for lv in levels2 for v in lv)
+                share = 0
+                while (
+                    share < min(len(flat), len(flat2))
+                    and flat[share] == flat2[share]
+                    and e2["cols"][flat2[share]] is used[flat[share]]
+                ):
+                    share += 1
+                if share > presorted:
+                    init_order, presorted = donor.order, share
+        trie = _build_trie_jit(used, lops, impl, budget, key_bits, init_order, presorted)
+        ns[key] = {"trie": trie, "cols": used}
+        self.builds += 1
+        if presorted:
+            self.order_shares += 1
+        return trie.table_view(lops.probed)
+
+
+TRIE_CACHE = TrieCache()
+
+
 def make_executor(
     plan: FreeJoinPlan,
     capacities,
@@ -302,7 +581,7 @@ def make_executor(
     agg: str | None = "count",
     schedule: StaticSchedule | None = None,
 ):
-    """Build a jit-able executor for `plan` (see module docstring).
+    """Build a jit-able probe program for `plan` (see module docstring).
 
     capacities: one static expansion capacity per executed node; compact_to:
     optional per-node compaction target (None = keep the buffer);
@@ -310,14 +589,17 @@ def make_executor(
     all — compact after the node; smaller values compact mid-node so the
     remaining probes run at the squeezed width); schedule: the query's
     StaticSchedule if the driver already computed it (None = walk the plan
-    here). Returns fn(rel_cols: {alias: {var: (N,) int32}}, rel_mults) ->
+    here). Returns fn(rel_data, rel_mults) ->
       agg="count":  (count, need_expand, need_compact)
       agg=None:     (bound, valid, mult, need_expand, need_compact)
-    rel_mults (optional) maps an alias to a per-row multiplicity vector;
-    such a relation is a *weighted* (stage-output) buffer whose mult-0 rows
-    are padding — see StaticTrie. rel_cols may contain extra aliases (the
-    chain driver passes one growing dict); only the plan's are read.
-    where need_expand/need_compact are (num_executed_nodes,) int32 vectors
+    rel_data maps alias -> either a prebuilt StaticTrie (the warm path:
+    zero build work in this call) or {var: (N,) int32} raw columns (built
+    in-graph — the cold path, and the only path for weighted stage
+    buffers). rel_mults (optional) maps an alias to a per-row multiplicity
+    vector; such a relation is a *weighted* (stage-output) buffer whose
+    mult-0 rows are padding — see StaticTrie. rel_data may contain extra
+    aliases (the chain driver passes one growing dict); only the plan's are
+    read. need_expand/need_compact are (num_executed_nodes,) int32 vectors
     of required totals: need_expand[i] is the lane count node i's expansion
     produced, need_compact[i] the live count at its compact point (0 when
     the node doesn't expand/compact). Node i overflowed iff
@@ -341,14 +623,23 @@ def make_executor(
     )
     assert len(compact_probe) == nsched, "one compact point per executed node"
 
+    def as_trie(src, lops: _LevelOps, mult):
+        if isinstance(src, StaticTrie):
+            assert src.levels == lops.levels, "prebuilt trie level mismatch"
+            for d, p in enumerate(lops.probed):
+                assert not p or src.trivial or src.tables[d] is not None, (
+                    f"prebuilt trie missing probed level-{d} table"
+                )
+            return src
+        return build_trie(src, lops, impl=impl, budget=budget, mult=mult)
+
     def run(
-        rel_cols: dict[str, dict[str, jnp.ndarray]],
+        rel_data: dict[str, object],
         rel_mults: dict[str, jnp.ndarray] | None = None,
     ):
         mults = rel_mults or {}
         tries = {
-            a: StaticTrie(rel_cols[a], level_ops[a], impl, budget, mult=mults.get(a))
-            for a in level_ops
+            a: as_trie(rel_data[a], level_ops[a], mults.get(a)) for a in level_ops
         }
         depth = {a: 0 for a in level_ops}
         # frontier
@@ -483,9 +774,12 @@ def make_chain_executor(
     as a padded buffer (invalid lanes stamped PAD_KEY, multiplicity 0), and
     the next stage builds a weighted StaticTrie straight from that buffer —
     no host round-trip, no eager engine. Returns
-        run(rel_cols) -> (root outputs..., need_expand_t, need_compact_t)
-    where rel_cols holds the *base* relations only and the need vectors are
-    per-stage tuples (one (num_nodes,) int32 vector each, stage order)."""
+        run(rel_data) -> (root outputs..., need_expand_t, need_compact_t)
+    where rel_data holds the *base* relations only — prebuilt StaticTries
+    or raw column dicts per alias, exactly as make_executor accepts — and
+    the need vectors are per-stage tuples (one (num_nodes,) int32 vector
+    each, stage order). Stage-output tries are always built in-graph: they
+    are weighted buffers of this one run and never cacheable."""
     assert len(stages) == len(cap_plans) >= 1, "one capacity plan per stage"
     fns = []
     for i, ((_name, plan), cp) in enumerate(zip(stages, cap_plans)):
@@ -502,8 +796,8 @@ def make_chain_executor(
             )
         )
 
-    def run(rel_cols: dict[str, dict[str, jnp.ndarray]]):
-        cols = dict(rel_cols)
+    def run(rel_data: dict[str, object]):
+        cols = dict(rel_data)
         stage_mults: dict[str, jnp.ndarray] = {}
         nes, ncs = [], []
         for (name, plan), fn in zip(stages[:-1], fns[:-1]):
@@ -611,6 +905,12 @@ class AdaptiveExecutor:
     Compiled executors are cached per capacity-vector chain and the grown
     plan replaces the initial one, so a stream of similar queries pays the
     retry + recompile once and then runs overflow-free.
+
+    run_relations is the warm serving surface: device uploads come from the
+    per-relation registry and base tries from the cross-call TRIE_CACHE, so
+    repeated calls over the same relations — and every overflow/tighten
+    re-run — pay probe cost only. Calling the executor directly with raw
+    column dicts keeps the cold (build-in-graph) behavior.
     """
 
     def __init__(
@@ -662,7 +962,18 @@ class AdaptiveExecutor:
         self.reshapes = 0  # tightening re-runs across calls
         self.calls = 0  # top-level call chains issued (retries excluded)
         self._cache: dict[tuple, object] = {}
-        self._dev_cols: dict[str, tuple] = {}  # alias -> (weakref(rel), device cols)
+        # base alias -> its level layout (for cross-call trie reuse); an
+        # alias read under two different layouts falls back to raw columns
+        base = _base_aliases(stages)
+        self._alias_lops: dict[str, _LevelOps | None] = {}
+        for sched in self.schedules:
+            for a, lo in sched.level_ops.items():
+                if a not in base:
+                    continue
+                if a in self._alias_lops and self._alias_lops[a] != lo:
+                    self._alias_lops[a] = None
+                else:
+                    self._alias_lops.setdefault(a, lo)
 
     @property
     def compiles(self) -> int:
@@ -688,15 +999,17 @@ class AdaptiveExecutor:
             self._cache[key] = jax.jit(fn) if self.jit else fn
         return self._cache[key]
 
-    def __call__(self, rel_cols: dict[str, dict[str, jnp.ndarray]]):
-        """agg="count" -> count scalar; agg=None -> (bound, valid, mult)."""
+    def __call__(self, rel_data: dict[str, object]):
+        """agg="count" -> count scalar; agg=None -> (bound, valid, mult).
+        rel_data values are prebuilt StaticTries and/or raw column dicts
+        (see make_executor)."""
         from repro.core.capacity import _round_block  # deferred: no cycle
 
         chain = self._as_chain(self.cap_plan)
         self.calls += 1
         tightened = False
         for _ in range(self.max_retries + 1):
-            out = self._fn(chain)(rel_cols)
+            out = self._fn(chain)(rel_data)
             grown = chain
             for s, (cp, ne, nc) in enumerate(zip(chain.stages, out[-2], out[-1])):
                 ne, nc = np.asarray(ne), np.asarray(nc)
@@ -738,22 +1051,26 @@ class AdaptiveExecutor:
             f"frontier overflow persists after {self.max_retries} retries: {chain}"
         )
 
-    def run_relations(self, relations):
-        """Convenience: host relations in, host results out. Device columns
-        are cached per alias and revalidated by relation object identity
-        (weakly held), so a stream of calls over the same immutable
-        relations uploads each base column once — only relations that are
-        actually new objects (e.g. a hybrid driver's freshly materialized
-        stage outputs) pay the transfer again."""
-        cols = {}
+    def run_relations(self, relations, *, reuse_tries: bool = True):
+        """Convenience: host relations in, host results out — the warm
+        path. Device columns come from the per-relation registry (uploaded
+        once per column object) and base tries from the cross-call
+        TRIE_CACHE, so a stream of calls over the same relations performs
+        zero builds after the first. reuse_tries=False bypasses the trie
+        cache and rebuilds in-graph every call (the cold baseline the
+        benchmarks time)."""
+        data = {}
         for a in sorted(_base_aliases(self.stages)):
             rel = relations[a]
-            hit = self._dev_cols.get(a)
-            if hit is None or hit[0]() is not rel:
-                dev = {v: jnp.asarray(rel.columns[v], jnp.int32) for v in rel.schema}
-                self._dev_cols[a] = (weakref.ref(rel), dev)
-            cols[a] = self._dev_cols[a][1]
-        out = self(cols)
+            dev = device_columns(rel)
+            lo = self._alias_lops.get(a)
+            if reuse_tries and lo is not None:
+                data[a] = TRIE_CACHE.get(
+                    rel, dev, lo, impl=self.impl, budget=self.budget
+                )
+            else:
+                data[a] = dev
+        out = self(data)
         if self.agg == "count":
             return int(out)
         return materialize_compiled(*out)

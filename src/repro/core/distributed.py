@@ -35,8 +35,6 @@ a special case of the same code path.
 from __future__ import annotations
 
 import itertools
-import weakref
-from collections import OrderedDict
 from dataclasses import replace
 
 import numpy as np
@@ -44,9 +42,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import api, engine
+from repro.core import api, engine, relcache
 from repro.core.capacity import CapacityPlan, plan_capacities
-from repro.core.compiled import _static_schedule, make_executor, overflows
+from repro.core.compiled import (
+    StaticTrie,
+    _static_schedule,
+    make_executor,
+    overflows,
+)
 from repro.core.optimizer import Stats
 from repro.core.plan import FreeJoinPlan
 from repro.relational.npkit import mix64
@@ -219,32 +222,96 @@ def _mask_pad(cols: dict[str, dict[str, jnp.ndarray]], counts: dict[str, jnp.nda
 
 
 # hypercube partition + dense padding + device transfer, cached across
-# SpmdCounter instances over the very same Relation objects (validated by
-# weak identity, so a mutated/replaced relations dict can never serve stale
-# fragments); bounded FIFO
-_partition_cache: OrderedDict[tuple, tuple] = OrderedDict()
-_PARTITION_CACHE_MAX = 8
+# SpmdCounter instances over the very same Relation objects. Relation
+# identity is part of the key (id per alias) and every entry is evicted by
+# a weakref finalizer the moment any of its relations dies — the dense
+# device fragments can neither outlive their relations nor be served to an
+# unrelated object that reused a dead relation's address.
+_partition_cache = relcache.KeyedCache(max_entries=8)
 
 
 def _cached_partition(query: Query, relations, shares, num_shards: int):
     """Dense device fragments for (query, shares, num_shards), reused when
     every relation object is identical to the cached entry's."""
-    key = (_query_sig(query), tuple(sorted(shares.items())), num_shards)
-    entry = _partition_cache.get(key)
-    if entry is not None:
-        refs, dense, counts = entry
-        if all(refs[a.alias]() is relations[a.alias] for a in query.atoms):
-            _partition_cache.move_to_end(key)
-            return dense, counts
+    rels = [relations[a.alias] for a in query.atoms]
+    key = (
+        _query_sig(query),
+        tuple(sorted(shares.items())),
+        num_shards,
+        tuple(id(r) for r in rels),
+    )
+    hit = _partition_cache.get(key)
+    if hit is not None:
+        return hit
     shards = partition(query, relations, shares, num_shards)
     dense, counts = pad_shards_to_dense(shards, query)
     dense = jax.tree.map(jnp.asarray, dense)
     counts = jax.tree.map(jnp.asarray, counts)
-    refs = {a.alias: weakref.ref(relations[a.alias]) for a in query.atoms}
-    _partition_cache[key] = (refs, dense, counts)
-    while len(_partition_cache) > _PARTITION_CACHE_MAX:
-        _partition_cache.popitem(last=False)
+    _partition_cache.put(key, (dense, counts), rels)
     return dense, counts
+
+
+# per-shard prebuilt tries: the SPMD build program — one shard_map'd
+# build_trie pass per alias, stacked along the shard axis — cached with the
+# same identity discipline as the partition. Every later count executor
+# (including every grow/recompile retry) takes the built tries as inputs,
+# so per-shard builds run once per (relations, shares, schedule, budget)
+# per process, not once per call or per retry.
+_shard_trie_cache = relcache.KeyedCache(max_entries=8)
+
+
+def _cached_shard_tries(
+    query: Query,
+    relations,
+    shares,
+    num_shards: int,
+    dense,
+    counts,
+    level_ops,
+    mesh,
+    axis: str,
+    impl: str,
+    budget: int = 32,
+):
+    rels = [relations[a.alias] for a in query.atoms]
+    key = (
+        _query_sig(query),
+        tuple(sorted(shares.items())),
+        num_shards,
+        tuple(sorted((a, lo) for a, lo in level_ops.items())),
+        axis,
+        impl,
+        budget,
+        tuple(id(r) for r in rels),
+    )
+    hit = _shard_trie_cache.get(key)
+    if hit is not None:
+        return hit
+    pspec = jax.sharding.PartitionSpec(axis)
+    in_specs = (
+        jax.tree.map(lambda _: pspec, dense),
+        jax.tree.map(lambda _: pspec, counts),
+    )
+
+    def per_shard(cols, cnts):
+        cols = jax.tree.map(lambda x: x[0], cols)
+        cnts = jax.tree.map(lambda x: x[0], cnts)
+        cols = _mask_pad(cols, cnts)
+        # lexsort path (key_bits=None): pad sentinels are negative
+        tries = {a: StaticTrie(cols[a], level_ops[a], impl, budget) for a in level_ops}
+        return jax.tree.map(lambda x: x[None], tries)
+
+    built = jax.jit(
+        shard_map(
+            per_shard,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=pspec,
+            check_rep=False,
+        )
+    )(dense, counts)
+    _shard_trie_cache.put(key, built, rels)
+    return built
 
 
 # grown capacity plans persist across SpmdCounter instances: each process
@@ -357,11 +424,23 @@ class SpmdCounter:
         self.impl = impl
         self.max_retries = max_retries
         self.retries = 0  # total overflow re-runs across calls
-        pspec = jax.sharding.PartitionSpec(axis)
-        self._in_specs = (
-            jax.tree.map(lambda _: pspec, self._dense),
-            jax.tree.map(lambda _: pspec, self._counts),
+        # build program: per-shard tries, prebuilt once (cached across
+        # instances over the same relations) — every count executor and
+        # every grow/recompile retry below reuses them as plain inputs
+        self._tries = _cached_shard_tries(
+            query,
+            relations,
+            self.shares,
+            num_shards,
+            self._dense,
+            self._counts,
+            self.schedule.level_ops,
+            mesh,
+            axis,
+            impl,
         )
+        pspec = jax.sharding.PartitionSpec(axis)
+        self._in_specs = (jax.tree.map(lambda _: pspec, self._tries),)
         self._cache: dict[tuple, object] = {}
 
     @property
@@ -375,11 +454,9 @@ class SpmdCounter:
             )
             axis, rspec = self.axis, jax.sharding.PartitionSpec()
 
-            def per_shard(cols, cnts):
-                cols = jax.tree.map(lambda x: x[0], cols)
-                cnts = jax.tree.map(lambda x: x[0], cnts)
-                cols = _mask_pad(cols, cnts)
-                c, ne, nc = local(cols)
+            def per_shard(tries):
+                tries = jax.tree.map(lambda x: x[0], tries)
+                c, ne, nc = local(tries)
                 # count by psum; needs by pmax — the host retry loop sizes
                 # every device's next capacities to the worst shard's need
                 return jax.lax.psum(c, axis), jax.lax.pmax(ne, axis), jax.lax.pmax(nc, axis)
@@ -401,7 +478,7 @@ class SpmdCounter:
     def __call__(self) -> int:
         cp = self.cap_plan
         for _ in range(self.max_retries + 1):
-            total, ne, nc = self._fn(cp)(self._dense, self._counts)
+            total, ne, nc = self._fn(cp)(self._tries)
             oe, oc = overflows(cp, ne, nc)
             if not (oe.any() or oc.any()):
                 self.cap_plan = cp  # steady state: keep the grown plan

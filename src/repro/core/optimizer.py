@@ -39,11 +39,19 @@ class Stats:
     (optimize -> plan_capacities -> estimate_prefixes): each referenced
     column is np.unique'd exactly once and the result cached. Holds a live
     reference to the driver's relation dict, so stage relations materialized
-    mid-query are visible without rebuilding the cache."""
+    mid-query are visible without rebuilding the cache.
 
-    def __init__(self, relations: dict[str, Relation]):
+    cached=True additionally persists each distinct count in the process-
+    wide weakref registry (core/relcache.py), keyed by relation + column
+    object identity — the compiled driver's steady-state surface, where a
+    repeated query over the same relations pays zero np.unique calls. The
+    default stays per-instance so eager-path callers keep the one-pass
+    contract without touching global state."""
+
+    def __init__(self, relations: dict[str, Relation], *, cached: bool = False):
         self.relations = relations
         self._distinct: dict[tuple[str, str], float] = {}
+        self._cached = cached
 
     def size(self, alias: str) -> int:
         return self.relations[alias].num_rows
@@ -51,8 +59,20 @@ class Stats:
     def distinct(self, alias: str, var: str) -> float:
         key = (alias, var)
         if key not in self._distinct:
-            col = self.relations[alias].columns[var]
-            self._distinct[key] = float(max(1, len(np.unique(col))))
+            rel = self.relations[alias]
+            col = rel.columns[var]
+
+            def compute():
+                return float(max(1, len(np.unique(col))))
+
+            if self._cached:
+                from repro.core import relcache
+
+                self._distinct[key] = relcache.memo(
+                    relcache.REGISTRY, rel, "distinct", var, col, compute
+                )
+            else:
+                self._distinct[key] = compute()
         return self._distinct[key]
 
 

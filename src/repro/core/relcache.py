@@ -1,0 +1,115 @@
+"""Weakref-keyed cache registry for per-relation device state.
+
+The compiled path keeps three kinds of state alive across calls so
+steady-state serving pays probe cost only: device uploads of base columns,
+built StaticTries, and per-column planning statistics. All of it is
+per-Relation-object, and all of it must die with the relation — caching by
+`id(rel)` is unsound (CPython reuses addresses after GC, so a dead
+relation's entry could be served to an unrelated new object), and caching
+by content is exactly the O(N) work the cache exists to avoid.
+
+Two primitives, both identity-keyed *through weak references* so an entry
+can never outlive (or be confused with) its relation:
+
+* `RelationRegistry` — relation -> named namespace dicts. Backed by a
+  WeakKeyDictionary: the interpreter drops the whole entry the moment the
+  relation is collected. Identity comes from the live object, never from a
+  reusable address.
+* `KeyedCache` — bounded mapping whose keys may span *several* relations
+  (a partition of a whole query, a compiled runner over a relation dict).
+  Relation identity goes into the key as `id(rel)`, but every entry
+  registers a `weakref.finalize` on each relation that evicts the entry on
+  death — the id can only be reused after the finalizer has already
+  removed the stale entry, closing the reuse race by construction.
+
+Values held here are strong references (device arrays, compiled
+executors): that is the point — they are the cache. Lifetime is bounded by
+the relations themselves plus the LRU bound on KeyedCache.
+"""
+from __future__ import annotations
+
+import weakref
+from collections import OrderedDict
+
+
+class RelationRegistry:
+    """Per-relation namespaces: `namespace(rel, "tries")` returns a dict
+    private to (rel, "tries") that dies with `rel`."""
+
+    def __init__(self):
+        self._spaces: weakref.WeakKeyDictionary = weakref.WeakKeyDictionary()
+
+    def namespace(self, rel, name: str) -> dict:
+        spaces = self._spaces.get(rel)
+        if spaces is None:
+            spaces = {}
+            self._spaces[rel] = spaces
+        return spaces.setdefault(name, {})
+
+    def clear(self) -> None:
+        self._spaces.clear()
+
+
+def memo(registry: "RelationRegistry", rel, space: str, key, obj, compute):
+    """The registry's one validation idiom, shared by every per-relation
+    memo (device uploads, key widths, distinct counts): cache `compute()`
+    under (rel, space, key), revalidated by `obj` identity — a replaced
+    column object recomputes, an identical one returns the cached value.
+    In-place mutation of `obj` is undetectable by design; replace the
+    object instead."""
+    ns = registry.namespace(rel, space)
+    hit = ns.get(key)
+    if hit is None or hit[0] is not obj:
+        ns[key] = (obj, compute())
+    return ns[key][1]
+
+
+class KeyedCache:
+    """Bounded LRU cache whose entries are pinned to relation lifetimes.
+
+    `put(key, value, rels)` stores value under `key` (which should embed
+    `id(r)` for each r in rels to make identity part of the key) and
+    arranges for the entry to be evicted when any of `rels` is collected.
+    """
+
+    def __init__(self, max_entries: int = 64):
+        self.max_entries = max_entries
+        self._data: OrderedDict = OrderedDict()
+
+    def get(self, key):
+        hit = self._data.get(key)
+        if hit is None:
+            return None
+        self._data.move_to_end(key)
+        return hit[0]
+
+    def put(self, key, value, rels=()) -> None:
+        old = self._data.pop(key, None)
+        if old is not None:
+            for fin in old[1]:
+                fin.detach()
+        fins = tuple(weakref.finalize(r, self._evict, key) for r in rels)
+        self._data[key] = (value, fins)
+        while len(self._data) > self.max_entries:
+            _k, (_v, evicted_fins) = self._data.popitem(last=False)
+            for fin in evicted_fins:
+                fin.detach()
+
+    def _evict(self, key) -> None:
+        entry = self._data.pop(key, None)
+        if entry is not None:
+            for fin in entry[1]:
+                fin.detach()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def clear(self) -> None:
+        for _k, (_v, fins) in self._data.items():
+            for fin in fins:
+                fin.detach()
+        self._data.clear()
+
+
+# the process-wide registry every compiled-path cache hangs off
+REGISTRY = RelationRegistry()

@@ -41,6 +41,17 @@ def compact_ref(valid: jnp.ndarray, out_capacity: int):
     return jnp.asarray(src), live
 
 
+def segmented_sort_ref(cols) -> jnp.ndarray:
+    """Lexicographic sort permutation over `cols` (cols[0] major), the
+    ground truth for the segmented radix sort. Host-side np.lexsort, which
+    is stable — the radix kernel's per-var LSD passes must reproduce the
+    exact permutation, not just the grouping."""
+    import numpy as np
+
+    host = [np.asarray(c) for c in cols]
+    return jnp.asarray(np.lexsort(tuple(reversed(host))).astype(np.int32))
+
+
 def csr_expand_ref(offsets: jnp.ndarray, groups: jnp.ndarray, capacity: int):
     """Expand each groups[i] into its CSR members, densely packed into a
     buffer of `capacity` slots. Returns (frontier_row, member, valid, total).

@@ -186,6 +186,7 @@ def test_spmd_caches_persist_across_instances(rng):
     # so it starts overflow-free and never re-partitions
     c2 = SpmdCounter(q, rels, fj, None, mesh, safety=1e-6)
     assert c2._dense is c1._dense, "partition must be served from the cache"
+    assert c2._tries is c1._tries, "per-shard tries must be served from the cache"
     assert c2.cap_plan == c1.cap_plan, "the grown plan must persist"
     assert c2() == want
     assert c2.retries == 0, "a persisted plan re-learns nothing"
@@ -193,6 +194,7 @@ def test_spmd_caches_persist_across_instances(rng):
     rels2 = {a.alias: Relation(a.alias, dict(rels[a.alias].columns)) for a in q.atoms}
     c3 = SpmdCounter(q, rels2, fj, None, mesh, safety=1e-6)
     assert c3._dense is not c1._dense
+    assert c3._tries is not c1._tries
     assert c3() == want
 
 

@@ -1,0 +1,248 @@
+"""Cross-call trie cache + weakref registry (the PR 5 build/probe split).
+
+The contract under test: a repeated identical compiled_free_join call is
+all cache hits — zero trie builds, zero build_table calls, zero np.unique,
+zero recompiles; a replaced column or relation rebuilds exactly what
+changed; weighted (stage-output) tries are never served from the cache;
+lazy builds construct hash tables only for the levels a schedule actually
+probes; and every identity-keyed cache entry dies with its relation.
+"""
+import gc
+
+import numpy as np
+import pytest
+
+import repro.core.compiled as compiled_mod
+from repro.core import compiled_free_join, free_join
+from repro.core.compiled import TRIE_CACHE, _LevelOps, device_columns
+from repro.core.plan import BinaryPlan
+from repro.relational.relation import Relation
+from repro.relational.schema import Atom, Query, triangle_query
+from tests.conftest import rand_rel
+
+
+def _counters():
+    c = TRIE_CACHE
+    return (c.builds, c.table_builds, c.hits, c.order_shares)
+
+
+# ---- the acceptance assertion: warm call performs zero build work ---------
+
+
+def test_second_identical_call_zero_builds(rng, monkeypatch):
+    """The second identical compiled_free_join call must perform zero trie
+    builds and zero build_table calls — probe cost only."""
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 60, 9) for a in q.atoms}
+    want = free_join(q, rels, agg="count")
+
+    assert compiled_free_join(q, rels, agg="count") == want  # cold: builds
+    builds0, tables0, hits0, _ = _counters()
+
+    # lock the warm path with counters on the build fns: neither the trie
+    # build nor any hash-table build may run again
+    build_calls, table_calls = [0], [0]
+    orig_build, orig_table = compiled_mod.build_trie, compiled_mod.ops.build_table
+    monkeypatch.setattr(
+        compiled_mod,
+        "build_trie",
+        lambda *a, **k: (build_calls.__setitem__(0, build_calls[0] + 1), orig_build(*a, **k))[1],
+    )
+    monkeypatch.setattr(
+        compiled_mod.ops,
+        "build_table",
+        lambda *a, **k: (table_calls.__setitem__(0, table_calls[0] + 1), orig_table(*a, **k))[1],
+    )
+    assert compiled_free_join(q, rels, agg="count") == want  # warm
+    assert build_calls[0] == 0, "warm call must not build any trie"
+    assert table_calls[0] == 0, "warm call must not build any hash table"
+    builds1, tables1, hits1, _ = _counters()
+    assert (builds1, tables1) == (builds0, tables0)
+    assert hits1 > hits0, "the warm call must actually hit the cache"
+
+
+def test_warm_call_zero_planning_host_work(rng, monkeypatch):
+    """Warm planning is dict lookups: no np.unique, no executor recompile
+    (the runner itself is reused)."""
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 50, 8) for a in q.atoms}
+    info = {}
+    cold = compiled_free_join(q, rels, agg="count", info=info)
+    compiles0 = info["runner"].compiles
+
+    uniq = [0]
+    orig_unique = np.unique
+    monkeypatch.setattr(
+        np, "unique", lambda *a, **k: (uniq.__setitem__(0, uniq[0] + 1), orig_unique(*a, **k))[1]
+    )
+    info2 = {}
+    assert compiled_free_join(q, rels, agg="count", info=info2) == cold
+    assert uniq[0] == 0, f"warm planning must not np.unique, got {uniq[0]}"
+    assert info2["runner"] is info["runner"], "the runner must be reused"
+    assert info2["runner"].compiles == compiles0, "no recompile on the warm call"
+
+
+# ---- invalidation: replaced columns / relations rebuild -------------------
+
+
+def test_replaced_column_rebuilds(rng):
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 60, 9) for a in q.atoms}
+    compiled_free_join(q, rels, agg="count")
+    builds0 = TRIE_CACHE.builds
+    # replacing a column array (same content, new object) must invalidate
+    # exactly R's cached trie — identity, not content, is the cheap check
+    rels["R"].columns["x"] = rels["R"].columns["x"].copy()
+    want = free_join(q, rels, agg="count")
+    assert compiled_free_join(q, rels, agg="count") == want
+    assert TRIE_CACHE.builds == builds0 + 1, "exactly the touched relation rebuilds"
+
+
+def test_replaced_relation_rebuilds_and_changes_result(rng):
+    from repro.core import optimize
+
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 60, 9) for a in q.atoms}
+    tree = optimize(q, rels)  # pin the plan: only the data changes below
+    compiled_free_join(q, rels, tree, agg="count")
+    builds0 = TRIE_CACHE.builds
+    rels["S"] = rand_rel(rng, "S", ("y", "z"), 80, 7)  # new object, new data
+    want = free_join(q, rels, tree, agg="count")
+    assert compiled_free_join(q, rels, tree, agg="count") == want
+    assert TRIE_CACHE.builds == builds0 + 1
+
+
+# ---- weighted stage tries are never served from the cache -----------------
+
+
+def test_weighted_tries_refused_by_cache(rng):
+    import jax.numpy as jnp
+
+    rel = rand_rel(rng, "R", ("x", "y"), 30, 5)
+    dev = device_columns(rel)
+    lops = _LevelOps((("x",), ("y",)), (True, False))
+    with pytest.raises(AssertionError, match="never cached"):
+        TRIE_CACHE.get(rel, dev, lops, mult=jnp.ones(30, jnp.int32))
+
+
+def test_bushy_stage_tries_rebuilt_per_call_base_tries_cached(rng):
+    """A bushy chain's stage-output tries are in-graph per call (weighted —
+    excluded from reuse); the base relations still hit the cache on the
+    second call, and results stay exact."""
+    q = Query(
+        [Atom("A", ("x", "y")), Atom("B", ("y", "z")), Atom("C", ("z", "w")), Atom("D", ("w", "u"))]
+    )
+    tree = BinaryPlan(BinaryPlan(q.atoms[0], q.atoms[1]), BinaryPlan(q.atoms[2], q.atoms[3]))
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 40, 8) for a in q.atoms}
+    want = free_join(q, rels, tree, agg="count")
+    assert compiled_free_join(q, rels, tree, agg="count") == want
+    builds0, tables0, hits0, _ = _counters()
+    assert compiled_free_join(q, rels, tree, agg="count") == want
+    builds1, tables1, hits1, _ = _counters()
+    assert (builds1, tables1) == (builds0, tables0), "base tries all cached"
+    assert hits1 > hits0
+
+
+# ---- lazy per-level tables + prefix-compatible order sharing --------------
+
+
+def test_lazy_build_tables_only_for_probed_levels(rng):
+    rel = rand_rel(rng, "R", ("x", "y"), 50, 6)
+    dev = device_columns(rel)
+    t1 = TRIE_CACHE.get(rel, dev, _LevelOps((("x",), ("y",)), (True, False)))
+    assert t1.tables[0] is not None, "probed level must have its table"
+    assert t1.tables[1] is None, "unprobed level must not build a table"
+    builds0, tables0 = TRIE_CACHE.builds, TRIE_CACHE.table_builds
+    # a second schedule probing the skipped level adds exactly one table —
+    # no re-sort, no structure rebuild
+    t2 = TRIE_CACHE.get(rel, dev, _LevelOps((("x",), ("y",)), (True, True)))
+    assert t2.tables[0] is not None and t2.tables[1] is not None
+    assert TRIE_CACHE.builds == builds0, "no full rebuild for a new probe pattern"
+    assert TRIE_CACHE.table_builds == tables0 + 1
+    assert t2.order is t1.order, "one sort order shared across probe patterns"
+    # the original probe pattern still sees only its own table
+    t1b = TRIE_CACHE.get(rel, dev, _LevelOps((("x",), ("y",)), (True, False)))
+    assert t1b.tables[1] is None
+
+
+def test_cover_only_trie_not_served_to_probing_schedule(rng):
+    """Trivial (cover-only) tries have no tables and no order; a schedule
+    that probes the same single level must get its own sorted+tabled build,
+    and both flavors coexist in the cache."""
+    import jax.numpy as jnp
+
+    rel = rand_rel(rng, "R", ("x", "y"), 40, 6)
+    dev = device_columns(rel)
+    cover = TRIE_CACHE.get(rel, dev, _LevelOps((("x", "y"),), (False,)))
+    assert cover.trivial and cover.tables is None
+    probed = TRIE_CACHE.get(rel, dev, _LevelOps((("x", "y"),), (True,)))
+    assert not probed.trivial and probed.tables[0] is not None
+    # the probing trie actually probes (would TypeError on a trivial serve)
+    hit = probed.probe(0, jnp.zeros(4, jnp.int32), [dev["x"][:4], dev["y"][:4]])
+    assert hit.shape == (4,)
+    # and the cover-only request still gets the trivial flavor back
+    again = TRIE_CACHE.get(rel, dev, _LevelOps((("x", "y"),), (False,)))
+    assert again.trivial
+
+
+def test_prefix_compatible_level_sequences_share_order(rng):
+    rel = rand_rel(rng, "R", ("x", "y"), 50, 6)
+    dev = device_columns(rel)
+    TRIE_CACHE.get(rel, dev, _LevelOps((("x",), ("y",)), (True, True)))
+    shares0 = TRIE_CACHE.order_shares
+    # single flat level over the same var prefix: new layout, shared sort
+    t = TRIE_CACHE.get(rel, dev, _LevelOps((("x", "y"),), (True,)))
+    assert TRIE_CACHE.order_shares == shares0 + 1
+    assert t.tables[0] is not None
+
+
+def test_runner_cache_safe_across_head_projections(rng):
+    """Queries differing only in output head: the compiled (and eager)
+    agg=None contract returns every bound var — projection happens
+    downstream via to_sorted_tuples — so runner reuse across heads is
+    safe. Lock the downstream results against the eager engine for both
+    heads; the runner key also carries the stage heads so this stays
+    correct if stage planning ever starts propagating user projections."""
+    from repro.core import to_sorted_tuples
+
+    atoms = [Atom("R", ("x", "y")), Atom("S", ("y", "z"))]
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 40, 6) for a in atoms}
+    q_full = Query(list(atoms))
+    q_proj = Query(list(atoms), head=("x",))
+    for q in (q_full, q_proj):
+        got = compiled_free_join(q, rels, agg=None)
+        want = free_join(q, rels, agg=None)
+        assert to_sorted_tuples(got, q.head) == to_sorted_tuples(want, q.head)
+
+
+# ---- registry lifetime: entries die with their relations ------------------
+
+
+def test_runner_and_trie_cache_entries_die_with_relations(rng):
+    from repro.core.api import _runner_cache
+    from repro.core.relcache import REGISTRY
+
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 40, 8) for a in q.atoms}
+    gc.collect()  # flush entries pending from earlier tests' dead relations
+    n0 = len(_runner_cache)
+    compiled_free_join(q, rels, agg="count")
+    assert len(_runner_cache) > n0
+    assert REGISTRY._spaces.get(rels["R"]) is not None
+    del rels
+    gc.collect()
+    # weakref finalizers evicted the runner; the registry dropped the
+    # per-relation namespaces with the objects (<=: the collect may also
+    # sweep other tests' stale entries)
+    assert len(_runner_cache) <= n0
+
+
+def test_device_columns_revalidated_by_column_identity(rng):
+    rel = rand_rel(rng, "R", ("x", "y"), 30, 5)
+    d1 = device_columns(rel)
+    d2 = device_columns(rel)
+    assert d1["x"] is d2["x"], "same column object -> same upload"
+    rel.columns["x"] = rel.columns["x"].copy()
+    d3 = device_columns(rel)
+    assert d3["x"] is not d1["x"], "replaced column -> fresh upload"
+    assert d3["y"] is d1["y"], "untouched column keeps its upload"
