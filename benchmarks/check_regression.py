@@ -14,6 +14,10 @@ fail the gate until a baseline is recorded for them. The factor (default
 are noisy and slower than dev machines — the gate exists to catch
 order-of-magnitude slips (an accidentally disabled cache, a rebuild
 sneaking back into the warm path), not single-digit drift.
+
+Rows whose name ends in `_qps` carry a throughput (higher is better) in
+the value column instead of a latency; the gate inverts the ratio for
+them, failing when throughput drops below baseline/factor.
 """
 from __future__ import annotations
 
@@ -69,11 +73,19 @@ def main() -> int:
         if got is None:
             failed.append(f"{name}: missing from {args.csv} (baseline {base_us:.0f}us)")
             continue
-        ratio = got / base_us
+        if name.endswith("_qps"):  # throughput row: regression = DROP
+            ratio = base_us / got if got else float("inf")
+            unit = "qps"
+        else:
+            ratio = got / base_us
+            unit = "us"
         status = "FAIL" if ratio > factor else "ok"
-        print(f"{status:>4}  {name:<42} {got:>12.0f}us  baseline {base_us:>10.0f}us  {ratio:5.2f}x")
+        print(f"{status:>4}  {name:<42} {got:>12.0f}{unit}  baseline {base_us:>10.0f}{unit}  {ratio:5.2f}x")
         if ratio > factor:
-            failed.append(f"{name}: {got:.0f}us > {factor:.1f}x baseline {base_us:.0f}us")
+            failed.append(
+                f"{name}: {got:.0f}{unit} regressed more than {factor:.1f}x "
+                f"from baseline {base_us:.0f}{unit}"
+            )
     if failed:
         print(f"\n{len(failed)} row(s) regressed more than {factor:.1f}x:", file=sys.stderr)
         for f_ in failed:

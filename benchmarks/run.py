@@ -15,7 +15,7 @@ import time
 
 from benchmarks.common import emit
 
-SUITES = ["job", "lsqb", "colt", "vectorization", "robustness", "kernels", "join_perf"]
+SUITES = ["job", "lsqb", "colt", "vectorization", "robustness", "kernels", "join_perf", "serving"]
 
 # per-suite kwargs for --smoke (every run() signature differs)
 SMOKE_ARGS: dict[str, dict] = {
@@ -26,6 +26,7 @@ SMOKE_ARGS: dict[str, dict] = {
     "robustness": dict(scale=0.02, repeats=1),
     "kernels": dict(repeats=1),
     "join_perf": dict(smoke=True, repeats=1),
+    "serving": dict(smoke=True, repeats=1),
 }
 
 

@@ -9,7 +9,7 @@ import jax
 import numpy as np
 
 from repro.models.transformer import ModelConfig, init_params
-from repro.serve import Request, ServeEngine
+from repro.serve import DecodeServeEngine, Request
 
 
 def main():
@@ -25,7 +25,7 @@ def main():
         remat=False,
     )
     params = init_params(jax.random.PRNGKey(7), cfg)
-    eng = ServeEngine(params, cfg, slots=8, max_len=256)
+    eng = DecodeServeEngine(params, cfg, slots=8, max_len=256)
     rng = np.random.default_rng(3)
     n_req = 24
     for i in range(n_req):

@@ -3,6 +3,7 @@
 # Free Join engine, baselines, optimizer, the capacity-planned compiled
 # path, and the distributed engine.
 from repro.core.api import (
+    ExecOptions,
     binary_join,
     compiled_free_join,
     free_join,
@@ -11,6 +12,7 @@ from repro.core.api import (
 )
 from repro.core.capacity import (
     CapacityPlan,
+    CapacityQuotaError,
     ChainCapacityPlan,
     agm_bound,
     plan_capacities,
@@ -34,7 +36,9 @@ from repro.core.plan import (
 __all__ = [
     "AdaptiveExecutor",
     "CapacityPlan",
+    "CapacityQuotaError",
     "ChainCapacityPlan",
+    "ExecOptions",
     "Est",
     "Stats",
     "StaticSchedule",

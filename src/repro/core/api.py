@@ -22,6 +22,9 @@ the host, root compiled) as a reference/benchmark baseline.
 """
 from __future__ import annotations
 
+import warnings
+from dataclasses import dataclass, fields, replace
+
 import numpy as np
 
 from repro.core import engine, relcache
@@ -36,6 +39,45 @@ from repro.core.plan import (
 from repro.core.optimizer import Stats, optimize
 from repro.relational.relation import Relation
 from repro.relational.schema import Atom, Query
+
+
+@dataclass(frozen=True)
+class ExecOptions:
+    """Execution knobs of the compiled path, as one frozen (hashable)
+    value: it rides through the runner-cache key, the serving engine's
+    template keys, and every planner/executor build, replacing the loose
+    kwarg set compiled_free_join used to take.
+
+    impl: kernel implementation ("jnp" | "pallas_interpret" | "pallas");
+    budget: hash-probe displacement budget; safety: multiplier on planner
+    cardinality estimates; compact_threshold: schedule compaction when the
+    live fraction is estimated to drop below this; jit: jax.jit the
+    executor; chain_stages: run every stage of a bushy plan on device
+    (False = the hybrid reference baseline)."""
+
+    impl: str = "jnp"
+    budget: int = 32
+    safety: float = 2.0
+    compact_threshold: float = 0.25
+    jit: bool = True
+    chain_stages: bool = True
+
+
+# one release of backwards compatibility: compiled_free_join's old loose
+# kwargs still work but warn (collapse them into ExecOptions)
+_LEGACY_OPTION_KWARGS = tuple(f.name for f in fields(ExecOptions))
+
+
+def _resolve_options(options: ExecOptions | None, legacy: dict) -> ExecOptions:
+    given = {k: v for k, v in legacy.items() if v is not None}
+    if given:
+        warnings.warn(
+            f"passing {sorted(given)} as loose kwargs is deprecated; "
+            "pass options=ExecOptions(...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return replace(options or ExecOptions(), **given)
 
 
 def _stage_atoms(leaves, query: Query, stage_schemas: dict[str, tuple[str, ...]]):
@@ -126,6 +168,28 @@ def _trie_modes(fj: FreeJoinPlan, fj_mode: str) -> dict[str, str]:
     return {a: ("simple" if a in probed else "colt") for a in parts}
 
 
+def _apply_filters_eager(
+    query: Query, relations: dict[str, Relation], filters: dict[str, int]
+) -> dict[str, Relation]:
+    """Eager-path equality selections: every atom containing a filtered var
+    is pre-selected to the rows matching the constant (joins equate the var
+    across atoms, so this is exactly sigma_{v=c} of the query result)."""
+    unknown = set(filters) - set(query.variables)
+    if unknown:
+        raise ValueError(f"filter vars not in the query: {sorted(unknown)}")
+    rels = dict(relations)
+    for a in query.atoms:
+        sel = [v for v in a.vars if v in filters]
+        if not sel:
+            continue
+        rel = rels[a.alias]
+        mask = np.ones(rel.num_rows, bool)
+        for v in sel:
+            mask &= rel.columns[v] == filters[v]
+        rels[a.alias] = rel.select(mask)
+    return rels
+
+
 def free_join(
     query: Query,
     relations: dict[str, Relation],
@@ -136,15 +200,43 @@ def free_join(
     dynamic_cover: bool = True,
     stats: engine.ExecStats | None = None,
     compiled: bool = False,
+    filters: dict[str, int] | None = None,
+    options: ExecOptions | None = None,
 ):
     """The full Free Join system: cost-based binary plan -> binary2fj ->
     factor -> COLT + vectorized execution (the paper's Sec 5 configuration).
 
-    compiled=True instead runs the root stage on the static-shape executor
-    with planner-derived capacities (mode/dynamic_cover/stats apply to the
-    eager path only)."""
+    compiled=True instead runs the whole plan on the static-shape executor
+    with planner-derived capacities (see compiled_free_join, which also
+    accepts `options`). The eager-only knobs are rejected loudly on the
+    compiled path — `mode` and `dynamic_cover` have no compiled equivalent
+    and `stats` (engine.ExecStats) measures the eager engine; silently
+    dropping them would misreport what ran. Use compiled_free_join's
+    `info` dict for compiled-path introspection.
+
+    filters: equality selections {var: constant}, applied on either path
+    (sigma_{v=c} over the join result). options: compiled-path ExecOptions
+    (invalid on the eager path)."""
     if compiled:
-        return compiled_free_join(query, relations, plan_tree, agg=agg)
+        dropped = []
+        if mode != "colt":
+            dropped.append(f"mode={mode!r}")
+        if dynamic_cover is not True:
+            dropped.append(f"dynamic_cover={dynamic_cover!r}")
+        if stats is not None:
+            dropped.append("stats (use compiled_free_join(info=...) instead)")
+        if dropped:
+            raise ValueError(
+                "free_join(compiled=True) does not honor the eager-path "
+                "arguments " + ", ".join(dropped)
+            )
+        return compiled_free_join(
+            query, relations, plan_tree, agg=agg, filters=filters, options=options
+        )
+    if options is not None:
+        raise ValueError("options=ExecOptions(...) applies to the compiled path only")
+    if filters:
+        relations = _apply_filters_eager(query, relations, filters)
     if plan_tree is None:
         plan_tree = optimize(query, relations)
     return _run_stages(
@@ -167,20 +259,116 @@ def free_join(
 _runner_cache = relcache.KeyedCache(max_entries=32)
 
 
-def _runner_key(stages, rels, base, agg, impl, budget, jit, safety, compact_threshold):
+def _runner_key(stages, rels, base, agg, options, filter_vars, batch, max_capacity):
     return (
         # str(plan) renders the nodes but not the output projection, and
         # agg=None executors bind exactly plan.query.head — so the head is
         # part of the executor's identity
         tuple((name, str(p), tuple(p.query.head)) for name, p in stages),
         agg,
-        impl,
-        budget,
-        jit,
-        safety,
-        compact_threshold,
+        options,
+        filter_vars,
+        batch,
+        max_capacity,
         tuple(sorted((a, id(rels[a])) for a in base)),
     )
+
+
+def _acquire_runner(
+    query: Query,
+    relations: dict[str, Relation],
+    plan_tree,
+    *,
+    agg: str | None,
+    options: ExecOptions,
+    filter_vars: tuple[str, ...] = (),
+    batch: int | None = None,
+    max_capacity: int | None = None,
+    cache=None,
+):
+    """One planning pass -> one (possibly cached) AdaptiveExecutor.
+
+    The shared runner-acquisition surface behind compiled_free_join AND the
+    join serving engine: a single optimizer.Stats cache feeds optimize and
+    plan_chain_capacities, the StaticSchedule per stage rides on its
+    CapacityPlan into every executor build, and the whole runner is keyed
+    in the runner cache by plan structure + head + options + filter vars +
+    batch width + relation identities. `filter_vars` builds a
+    constant-parameterized executor (capacities planned with
+    FilteredStats, sized for the selected slice); `batch` builds the
+    vmapped multi-lane variant; `max_capacity` arms the per-node growth
+    quota (admission control). `cache` defaults to the verbatim runner
+    cache — the serving engine passes its template-scoped namespace.
+
+    Returns (runner, rels, cacheable): rels is the relation dict the
+    runner should execute over (the hybrid baseline materializes its eager
+    stages into it), and cacheable=False marks hybrid multi-stage runs
+    whose per-call stage relations make caching useless."""
+    from repro.core.capacity import plan_chain_capacities
+    from repro.core.compiled import AdaptiveExecutor, _base_aliases
+    from repro.core.optimizer import FilteredStats
+
+    cache = _runner_cache if cache is None else cache
+    rels = dict(relations)
+    stats = Stats(rels, cached=True)  # live view + registry-backed distincts
+    if plan_tree is None:
+        plan_tree = optimize(query, rels, stats=stats)
+    stages = _stage_plans(query, plan_tree)
+    # the hybrid path materializes fresh stage relations per call — a cache
+    # entry keyed on them could never hit (and its put would evict a live
+    # runner), so don't store one
+    cacheable = options.chain_stages or len(stages) == 1
+    if not options.chain_stages and len(stages) > 1:
+        if filter_vars:
+            raise ValueError("filters require chain_stages=True (the hybrid "
+                             "baseline's eager stages cannot parameterize constants)")
+        # hybrid baseline: non-root stages eager on the host, root compiled
+        for name, fj in stages[:-1]:
+            bound, mult = engine.execute(fj, rels, mode=_trie_modes(fj, "colt"), agg=None)
+            rels[name] = Relation(name, engine.materialize(bound, mult, fj.query.head))
+        stages = stages[-1:]
+    base = sorted(_base_aliases(stages))
+    key = _runner_key(stages, rels, base, agg, options, filter_vars, batch, max_capacity)
+    runner = cache.get(key) if cacheable else None
+    if runner is None:
+        pstats = stats
+        if filter_vars and batch is None:
+            # kill-mode filters prune the frontier as they apply, so
+            # capacity-plan for the selected slice, not the whole relation:
+            # depends only on WHICH vars are filtered (never the constants),
+            # so the plan is shared by every query of the template. optimize
+            # above stays unfiltered for the same template-stability reason.
+            # Batched (mask-mode) runners keep the UNfiltered frontier
+            # layout — shared across lanes — so plain stats size them right.
+            pstats = FilteredStats(
+                stats,
+                {a.alias: frozenset(v for v in a.vars if v in filter_vars)
+                 for a in query.atoms},
+            )
+        cap_plan = plan_chain_capacities(
+            stages,
+            stats=pstats,
+            safety=options.safety,
+            compact_threshold=options.compact_threshold,
+        )
+        if len(stages) == 1:  # classic single-stage surface (plain CapacityPlan)
+            cap_plan = cap_plan.stages[0]
+        plan_arg = stages[0][1] if len(stages) == 1 else tuple(stages)
+        runner = AdaptiveExecutor(
+            plan_arg,
+            cap_plan,
+            impl=options.impl,
+            budget=options.budget,
+            agg=agg,
+            jit=options.jit,
+            tighten=True,
+            filter_vars=filter_vars,
+            batch=batch,
+            max_capacity=max_capacity,
+        )
+        if cacheable:
+            cache.put(key, runner, [rels[a] for a in base])
+    return runner, rels, cacheable
 
 
 def compiled_free_join(
@@ -189,22 +377,23 @@ def compiled_free_join(
     plan_tree: BinaryPlan | Atom | None = None,
     *,
     agg: str | None = "count",
-    impl: str = "jnp",
-    budget: int = 32,
-    safety: float = 2.0,
-    compact_threshold: float = 0.25,
-    jit: bool = True,
+    options: ExecOptions | None = None,
+    filters: dict[str, int] | None = None,
     info: dict | None = None,
-    chain_stages: bool = True,
+    impl: str | None = None,
+    budget: int | None = None,
+    safety: float | None = None,
+    compact_threshold: float | None = None,
+    jit: bool | None = None,
+    chain_stages: bool | None = None,
 ):
     """Compiled driver, no manual capacities (see module docstring).
 
-    One planning pass serves the whole query: a single optimizer.Stats cache
-    feeds optimize and plan_chain_capacities, and the StaticSchedule
-    computed per stage rides on its CapacityPlan into every executor build.
-    Zero-row inputs run through the executor natively (an empty relation is
-    a trie whose every frontier expansion yields zero live lanes) — no
-    host-side gate.
+    Execution knobs ride in `options` (ExecOptions); the old loose kwargs
+    (impl/budget/safety/compact_threshold/jit/chain_stages) still work for
+    one release behind a DeprecationWarning. Zero-row inputs run through
+    the executor natively (an empty relation is a trie whose every frontier
+    expansion yields zero live lanes) — no host-side gate.
 
     Repeated calls over the same relation objects are the steady-state
     serving path and pay probe cost only: distinct counts persist in the
@@ -214,57 +403,47 @@ def compiled_free_join(
     a warm call performs zero np.unique, zero trie builds, zero
     build_table calls, and zero recompiles.
 
+    `filters` ({var: constant}) runs the query under equality selections
+    through a constant-parameterized executor: the constants are runtime
+    inputs, so every call with the same filtered VARS — whatever the
+    constants — reuses one compiled runner. (The multi-query batched
+    surface over the same machinery is serve.JoinServeEngine.)
+
     Every stage of a bushy plan — not just the root — runs on the
     static-shape executor, chained on device inside one
     compiled.AdaptiveExecutor call (see compiled.make_chain_executor);
-    `chain_stages=False` restores the previous hybrid (non-root stages on
-    the eager host engine) as a reference baseline. Returns the eager
-    contract: a count for agg="count", else (bound, mult) over live rows.
-    `info`, if given, receives the runner, capacity plan, and retry
+    ExecOptions(chain_stages=False) restores the previous hybrid (non-root
+    stages on the eager host engine) as a reference baseline. Returns the
+    eager contract: a count for agg="count", else (bound, mult) over live
+    rows. `info`, if given, receives the runner, capacity plan, and retry
     counters for inspection."""
-    from repro.core.capacity import plan_chain_capacities
-    from repro.core.compiled import AdaptiveExecutor, _base_aliases
-
-    rels = dict(relations)
-    stats = Stats(rels, cached=True)  # live view + registry-backed distincts
-    if plan_tree is None:
-        plan_tree = optimize(query, rels, stats=stats)
-    stages = _stage_plans(query, plan_tree)
-    # the hybrid path materializes fresh stage relations per call — a cache
-    # entry keyed on them could never hit (and its put would evict a live
-    # runner), so don't store one
-    cacheable = chain_stages or len(stages) == 1
-    if not chain_stages and len(stages) > 1:
-        # hybrid baseline: non-root stages eager on the host, root compiled
-        for name, fj in stages[:-1]:
-            bound, mult = engine.execute(fj, rels, mode=_trie_modes(fj, "colt"), agg=None)
-            rels[name] = Relation(name, engine.materialize(bound, mult, fj.query.head))
-        stages = stages[-1:]
-    base = sorted(_base_aliases(stages))
-    key = _runner_key(stages, rels, base, agg, impl, budget, jit, safety, compact_threshold)
-    runner = _runner_cache.get(key) if cacheable else None
-    if runner is None:
-        cap_plan = plan_chain_capacities(
-            stages, stats=stats, safety=safety, compact_threshold=compact_threshold
-        )
-        if len(stages) == 1:  # classic single-stage surface (plain CapacityPlan)
-            cap_plan = cap_plan.stages[0]
-        plan_arg = stages[0][1] if len(stages) == 1 else tuple(stages)
-        runner = AdaptiveExecutor(
-            plan_arg, cap_plan, impl=impl, budget=budget, agg=agg, jit=jit, tighten=True
-        )
-        if cacheable:
-            _runner_cache.put(key, runner, [rels[a] for a in base])
+    opts = _resolve_options(
+        options,
+        dict(impl=impl, budget=budget, safety=safety,
+             compact_threshold=compact_threshold, jit=jit, chain_stages=chain_stages),
+    )
+    filters = dict(filters or {})
+    unknown = set(filters) - set(query.variables)
+    if unknown:
+        raise ValueError(f"filter vars not in the query: {sorted(unknown)}")
+    filter_vars = tuple(sorted(filters))
+    runner, rels, cacheable = _acquire_runner(
+        query, relations, plan_tree, agg=agg, options=opts, filter_vars=filter_vars
+    )
+    consts = (
+        np.asarray([filters[v] for v in filter_vars], np.int32) if filter_vars else None
+    )
     # the hybrid baseline's stage relations are fresh every call — skip the
     # trie cache entirely there (in-graph builds ARE its per-call cost;
     # caching would only insert dead-on-arrival entries)
-    out = runner.run_relations(rels, reuse_tries=cacheable)
+    out = runner.run_relations(rels, reuse_tries=cacheable, filter_consts=consts)
     if info is not None:
         info.update(
             runner=runner,
             cap_plan=runner.cap_plan,
             retries=runner.retries,
             compiles=runner.compiles,
+            options=opts,
         )
     return out
 

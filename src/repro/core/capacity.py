@@ -87,6 +87,30 @@ def _round_block(x: float, block: int) -> int:
     return max(block, int(math.ceil(x / block)) * block)
 
 
+class CapacityQuotaError(RuntimeError):
+    """A query's frontier requirement exceeded its admission quota.
+
+    Raised by the adaptive runner *instead of* growing a buffer past
+    `max_capacity`: under multi-tenant serving, growing (and therefore
+    recompiling) the shared batched executor for one pathological query
+    would stall every co-batched tenant, so the runner surfaces the
+    violation and lets the serving layer reject exactly the offending
+    request. `lane` identifies the batch lane whose reported need drove the
+    violation (None for unbatched runs)."""
+
+    def __init__(self, stage: int, node: int, need: int, cap: int, lane: int | None = None):
+        self.stage = stage
+        self.node = node
+        self.need = need
+        self.cap = cap
+        self.lane = lane
+        who = f" (batch lane {lane})" if lane is not None else ""
+        super().__init__(
+            f"stage {stage} node {node} needs {need} frontier lanes, "
+            f"over the {cap}-lane capacity quota{who}"
+        )
+
+
 @dataclass(frozen=True)
 class CapacityPlan:
     """Static per-node frontier sizing for one compiled plan.
@@ -176,6 +200,11 @@ class CapacityPlan:
         )
         return replace(self, capacities=caps, compact_to=ct)
 
+    def cells(self) -> int:
+        """Total planned frontier cells — the admission-control currency:
+        quotas compare this against a per-query budget before any compile."""
+        return int(sum(self.capacities))
+
     def __str__(self):
         parts = []
         for i, (cap, ct) in enumerate(zip(self.capacities, self.compact_to)):
@@ -217,6 +246,11 @@ class ChainCapacityPlan:
         return replace(
             self, stages=tuple(cp if i == stage else c for i, c in enumerate(self.stages))
         )
+
+    def cells(self) -> int:
+        """Total planned frontier cells across every stage (see
+        CapacityPlan.cells)."""
+        return sum(cp.cells() for cp in self.stages)
 
     def with_schedules(self, schedules) -> "ChainCapacityPlan":
         return replace(

@@ -580,6 +580,8 @@ def make_executor(
     budget: int = 32,
     agg: str | None = "count",
     schedule: StaticSchedule | None = None,
+    filters: tuple = (),
+    filter_kill: bool = True,
 ):
     """Build a jit-able probe program for `plan` (see module docstring).
 
@@ -605,8 +607,34 @@ def make_executor(
     the node doesn't expand/compact). Node i overflowed iff
     need_expand[i] > capacities[i] (resp. need_compact[i] > compact_to[i]);
     the need is the exact capacity the adaptive runner should jump to.
+
+    filters: ((var, const_index), ...) — equality selections whose
+    *constants live outside the compiled program*: the run fn gains a
+    third argument `filter_consts`, a traced int32 vector, compared
+    against `bound[var]` the moment `var` is bound. Because the constant
+    is a runtime value, every query of a plan template (same structure,
+    different constants) shares ONE compiled executor. Two dispositions
+    for the comparison's outcome:
+
+    * filter_kill=True (single-query serving): the comparison ANDs into
+      `valid` — filter-dead lanes stop probing immediately and compaction
+      squeezes them out, so a selective constant makes the whole run
+      cheaper.
+    * filter_kill=False (batched serving): the comparison ANDs into a
+      SEPARATE per-lane mask (`fvalid`) that rides along the frontier and
+      folds in only at the terminal count/output. `valid`, every
+      expansion count, every compaction, every probe — the entire
+      frontier *layout* — stays constant-independent, so under jax.vmap
+      over a (B, F) constants matrix the whole probe pipeline is computed
+      ONCE and shared across lanes; only the mask ops and the final
+      reduction batch. This is what makes one batched dispatch of B
+      queries cost ~one unfiltered query instead of B filtered ones.
     """
     plan.validate()
+    filters = tuple(filters)
+    filter_idx = {v: int(i) for v, i in filters}
+    unknown = set(filter_idx) - set(plan.query.variables)
+    assert not unknown, f"filter vars not bound by this plan: {sorted(unknown)}"
     if schedule is None:
         schedule = _static_schedule(plan)
     level_ops = schedule.level_ops
@@ -636,7 +664,11 @@ def make_executor(
     def run(
         rel_data: dict[str, object],
         rel_mults: dict[str, jnp.ndarray] | None = None,
+        filter_consts: jnp.ndarray | None = None,
     ):
+        assert not filter_idx or filter_consts is not None, (
+            "this executor was built with filters; pass filter_consts"
+        )
         mults = rel_mults or {}
         tries = {
             a: as_trie(rel_data[a], level_ops[a], mults.get(a)) for a in level_ops
@@ -648,6 +680,10 @@ def make_executor(
         mult = jnp.ones(1, jnp.int32)  # int64 needs x64; counts < 2^31 here
         bound: dict[str, jnp.ndarray] = {}
         gid: dict[str, jnp.ndarray] = {}
+        # mask-mode filter state (filter_kill=False): per-lane liveness that
+        # never feeds the frontier layout — created at the first filter
+        # comparison, gathered alongside the frontier, folded in at the end
+        fvalid: list = [None]
         need_expand = [jnp.zeros((), jnp.int32) for _ in range(nsched)]
         need_compact = [jnp.zeros((), jnp.int32) for _ in range(nsched)]
 
@@ -659,6 +695,8 @@ def make_executor(
             bound = {v: a[srcc] for v, a in bound.items()}
             gid = {a: arr[srcc] for a, arr in gid.items()}
             mult = mult[srcc]
+            if fvalid[0] is not None:
+                fvalid[0] = fvalid[0][srcc]
             valid = jnp.arange(c_compact, dtype=jnp.int32) < live
             return bound, gid, mult, valid, c_compact
 
@@ -669,7 +707,9 @@ def make_executor(
             d = depth[cover.alias]
             g = gid.get(cover.alias, jnp.zeros(cap, jnp.int32))
             last = d == t.L - 1
-            needed = _needed_later_static(plan, k, probes, agg)
+            # a filtered var can never take the factorized-count shortcut:
+            # its comparison against the constant needs the bound values
+            needed = _needed_later_static(plan, k, probes, agg) | set(filter_idx)
             if agg == "count" and not (set(cover.vars) & needed) and last and not (
                 set(cover.vars) & set(bound)
             ):
@@ -687,6 +727,8 @@ def make_executor(
                 bound = {v: a[frc] for v, a in bound.items()}
                 gid = {a: arr[frc] for a, arr in gid.items()}
                 mult = mult[frc]
+                if fvalid[0] is not None:
+                    fvalid[0] = fvalid[0][frc]
                 valid = vnew
                 cap = c_next
                 cols, new_g = t.bind_iter(d, memc, last)
@@ -695,6 +737,15 @@ def make_executor(
                         valid = valid & (bound[v] == cvals)
                     else:
                         bound[v] = cvals
+                        if v in filter_idx:  # constant selection, applied
+                            # the moment the var is bound
+                            hit = cvals == filter_consts[filter_idx[v]]
+                            if filter_kill:  # dead lanes never reach a probe
+                                valid = valid & hit
+                            elif fvalid[0] is None:  # layout-neutral mask
+                                fvalid[0] = hit
+                            else:
+                                fvalid[0] = fvalid[0] & hit
                 depth[cover.alias] = d + 1
                 if new_g is None or depth[cover.alias] == t.L:
                     # last-level iteration enumerates physical rows, so bag
@@ -735,6 +786,8 @@ def make_executor(
                 bound, gid, mult, valid, cap = squeeze(bound, gid, mult, valid, cap, c_compact, i)
         ne = jnp.stack(need_expand) if nsched else jnp.zeros(0, jnp.int32)
         nc = jnp.stack(need_compact) if nsched else jnp.zeros(0, jnp.int32)
+        if fvalid[0] is not None:  # mask-mode filters fold in only here
+            valid = valid & fvalid[0]
         if agg == "count":
             return jnp.sum(jnp.where(valid, mult, 0)), ne, nc
         # lanes that went through a weighted trie's probe path can survive
@@ -764,6 +817,8 @@ def make_chain_executor(
     impl: str = "jnp",
     budget: int = 32,
     agg: str | None = "count",
+    filter_vars: tuple[str, ...] = (),
+    filter_kill: bool = True,
 ):
     """One on-device program for a whole bushy plan (Sec 2.2 stages).
 
@@ -779,10 +834,25 @@ def make_chain_executor(
     or raw column dicts per alias, exactly as make_executor accepts — and
     the need vectors are per-stage tuples (one (num_nodes,) int32 vector
     each, stage order). Stage-output tries are always built in-graph: they
-    are weighted buffers of this one run and never cacheable."""
+    are weighted buffers of this one run and never cacheable.
+
+    filter_vars names equality-selected vars (plan-template constants, see
+    make_executor): run gains a `filter_consts` int32 vector in
+    filter_vars order, and each var's comparison runs in the FIRST stage
+    that binds it — filtered rows carry mult 0 into downstream weighted
+    tries, so later stages never re-check. filter_kill picks the
+    comparison's disposition (see make_executor); in mask mode a non-root
+    stage's terminal fold still stamps filter-dead rows mult-0, so later
+    stages of a batched chain run per-lane — single-stage plans are the
+    fully-shared fast path."""
     assert len(stages) == len(cap_plans) >= 1, "one capacity plan per stage"
+    filter_vars = tuple(filter_vars)
+    unassigned = dict((v, i) for i, v in enumerate(filter_vars))
     fns = []
     for i, ((_name, plan), cp) in enumerate(zip(stages, cap_plans)):
+        stage_filters = tuple(
+            (v, unassigned.pop(v)) for v in tuple(plan.query.variables) if v in unassigned
+        )
         fns.append(
             make_executor(
                 plan,
@@ -793,21 +863,24 @@ def make_chain_executor(
                 budget=budget,
                 agg=agg if i == len(stages) - 1 else None,
                 schedule=cp.schedule,
+                filters=stage_filters,
+                filter_kill=filter_kill,
             )
         )
+    assert not unassigned, f"filter vars not bound by any stage: {sorted(unassigned)}"
 
-    def run(rel_data: dict[str, object]):
+    def run(rel_data: dict[str, object], filter_consts: jnp.ndarray | None = None):
         cols = dict(rel_data)
         stage_mults: dict[str, jnp.ndarray] = {}
         nes, ncs = [], []
         for (name, plan), fn in zip(stages[:-1], fns[:-1]):
-            bound, valid, mult, ne, nc = fn(cols, stage_mults)
+            bound, valid, mult, ne, nc = fn(cols, stage_mults, filter_consts)
             head = plan.query.head
             cols[name] = {v: jnp.where(valid, bound[v], PAD_KEY) for v in head}
             stage_mults[name] = jnp.where(valid, mult, 0).astype(jnp.int32)
             nes.append(ne)
             ncs.append(nc)
-        out = fns[-1](cols, stage_mults)
+        out = fns[-1](cols, stage_mults, filter_consts)
         nes.append(out[-2])
         ncs.append(out[-1])
         return out[:-2] + (tuple(nes), tuple(ncs))
@@ -911,6 +984,21 @@ class AdaptiveExecutor:
     repeated calls over the same relations — and every overflow/tighten
     re-run — pay probe cost only. Calling the executor directly with raw
     column dicts keeps the cold (build-in-graph) behavior.
+
+    Serving extensions (the multi-tenant path, see serve/join_engine.py):
+
+    * filter_vars — equality selections whose constants are runtime inputs
+      (plan templates): __call__ takes a `filter_consts` int32 vector in
+      filter_vars order, and one compiled executor serves every constant.
+    * batch=B — the whole chain is vmapped over filter_consts, so ONE
+      device dispatch runs B queries of the template against the SAME
+      shared tries: filter_consts becomes (B, F), counts come back (B,),
+      and need vectors come back per lane. Overflow growth uses the
+      per-node max across lanes (the chain's static shapes are shared).
+    * max_capacity — per-node growth quota: a need that would grow any
+      node past it raises capacity.CapacityQuotaError naming the offending
+      batch lane instead of recompiling the shared executor, so admission
+      control can reject exactly that request.
     """
 
     def __init__(
@@ -924,6 +1012,9 @@ class AdaptiveExecutor:
         jit: bool = True,
         max_retries: int = 12,
         tighten: bool = False,
+        filter_vars: tuple[str, ...] = (),
+        batch: int | None = None,
+        max_capacity: int | None = None,
     ):
         from repro.core.capacity import ChainCapacityPlan  # deferred: no cycle
 
@@ -958,6 +1049,13 @@ class AdaptiveExecutor:
         self.jit = jit
         self.max_retries = max_retries
         self.tighten = tighten
+        self.filter_vars = tuple(filter_vars)
+        self.batch = batch
+        self.max_capacity = max_capacity
+        assert batch is None or self.filter_vars, (
+            "batched execution varies only the constant vector per lane; "
+            "a template with no filters should run once, unbatched"
+        )
         self.retries = 0  # total overflow re-runs across calls
         self.reshapes = 0  # tightening re-runs across calls
         self.calls = 0  # top-level call chains issued (retries excluded)
@@ -995,28 +1093,71 @@ class AdaptiveExecutor:
                 impl=self.impl,
                 budget=self.budget,
                 agg=self.agg,
+                filter_vars=self.filter_vars,
+                # batched runs use mask-mode filters so the frontier layout
+                # is shared across lanes; single-query runs keep kill mode
+                # (lane death feeds compaction, a selective constant is
+                # genuinely cheaper)
+                filter_kill=self.batch is None,
             )
+            if self.batch is not None:
+                # one dispatch for the whole template batch: tries are
+                # broadcast (in_axes=None), only the constant vector is
+                # mapped — pre-filter work stays unbatched inside vmap
+                fn = jax.vmap(fn, in_axes=(None, 0))
             self._cache[key] = jax.jit(fn) if self.jit else fn
         return self._cache[key]
 
-    def __call__(self, rel_data: dict[str, object]):
+    def _reduced(self, need):
+        """Per-node need vector of a (possibly per-lane) reported need:
+        batched runs report (B, n); the chain's static shapes are shared,
+        so growth follows the max over lanes."""
+        need = np.asarray(need)
+        return need.max(axis=0) if need.ndim == 2 else need
+
+    def _check_quota(self, chain, s: int, i: int, need: int, per_lane) -> None:
+        from repro.core.capacity import CapacityQuotaError, _round_block
+
+        if self.max_capacity is None:
+            return
+        cp = chain.stages[s]
+        target = max(2 * cp.capacities[i], _round_block(int(need), cp.block))
+        if target <= self.max_capacity:
+            return
+        lane = None
+        if per_lane.ndim == 2:
+            lane = int(np.argmax(per_lane[:, i]))
+        raise CapacityQuotaError(s, i, int(need), self.max_capacity, lane=lane)
+
+    def __call__(self, rel_data: dict[str, object], filter_consts=None):
         """agg="count" -> count scalar; agg=None -> (bound, valid, mult).
         rel_data values are prebuilt StaticTries and/or raw column dicts
-        (see make_executor)."""
+        (see make_executor). filter_consts: (F,) int32 in filter_vars
+        order — or (batch, F) for a batched runner, which returns (B,)
+        counts (agg="count") or per-lane (bound, valid, mult)."""
         from repro.core.capacity import _round_block  # deferred: no cycle
 
+        if self.filter_vars:
+            assert filter_consts is not None, "this runner's template has filters"
+            filter_consts = jnp.asarray(filter_consts, jnp.int32)
+            want = (self.batch, len(self.filter_vars)) if self.batch else (
+                len(self.filter_vars),
+            )
+            assert filter_consts.shape == want, (filter_consts.shape, want)
         chain = self._as_chain(self.cap_plan)
         self.calls += 1
         tightened = False
         for _ in range(self.max_retries + 1):
-            out = self._fn(chain)(rel_data)
+            fn = self._fn(chain)
+            out = fn(rel_data, filter_consts) if self.filter_vars else fn(rel_data)
             grown = chain
-            for s, (cp, ne, nc) in enumerate(zip(chain.stages, out[-2], out[-1])):
-                ne, nc = np.asarray(ne), np.asarray(nc)
+            for s, (cp, ne_l, nc_l) in enumerate(zip(chain.stages, out[-2], out[-1])):
+                ne, nc = self._reduced(ne_l), self._reduced(nc_l)
                 oe, oc = overflows(cp, ne, nc)
                 for i in np.flatnonzero(oc):
                     grown = grown.grow_to(s, int(i), int(nc[i]), compaction=True)
                 for i in np.flatnonzero(oe):
+                    self._check_quota(chain, s, int(i), int(ne[i]), np.asarray(ne_l))
                     grown = grown.grow_to(s, int(i), int(ne[i]))
             if grown is not chain:
                 chain = grown
@@ -1030,7 +1171,7 @@ class AdaptiveExecutor:
                 # on average; the measurement is exact)
                 shrunk = chain
                 for s, (ne, nc) in enumerate(zip(out[-2], out[-1])):
-                    ne, nc = np.asarray(ne), np.asarray(nc)
+                    ne, nc = self._reduced(ne), self._reduced(nc)
                     for i in range(len(ne)):
                         cp = shrunk.stages[s]
                         if cp.capacities[i] > 2 * _round_block(int(ne[i]), cp.block):
@@ -1051,14 +1192,16 @@ class AdaptiveExecutor:
             f"frontier overflow persists after {self.max_retries} retries: {chain}"
         )
 
-    def run_relations(self, relations, *, reuse_tries: bool = True):
+    def run_relations(self, relations, *, reuse_tries: bool = True, filter_consts=None):
         """Convenience: host relations in, host results out — the warm
         path. Device columns come from the per-relation registry (uploaded
         once per column object) and base tries from the cross-call
         TRIE_CACHE, so a stream of calls over the same relations performs
         zero builds after the first. reuse_tries=False bypasses the trie
         cache and rebuilds in-graph every call (the cold baseline the
-        benchmarks time)."""
+        benchmarks time). A batched runner returns the per-lane results:
+        a (B,) int64 count vector for agg="count", else a list of
+        (cols, mult) pairs, one per lane."""
         data = {}
         for a in sorted(_base_aliases(self.stages)):
             rel = relations[a]
@@ -1070,9 +1213,17 @@ class AdaptiveExecutor:
                 )
             else:
                 data[a] = dev
-        out = self(data)
+        out = self(data, filter_consts)
         if self.agg == "count":
-            return int(out)
+            return np.asarray(out, np.int64) if self.batch else int(out)
+        if self.batch:
+            bound, valid, mult = out
+            return [
+                materialize_compiled(
+                    {v: a[b] for v, a in bound.items()}, valid[b], mult[b]
+                )
+                for b in range(self.batch)
+            ]
         return materialize_compiled(*out)
 
 

@@ -15,6 +15,7 @@ regime).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 import numpy as np
@@ -102,6 +103,40 @@ class StageStats:
             e = self._stage[alias]
             return float(min(max(1.0, e.distinct.get(var, e.card)), max(1.0, e.card)))
         return self.base.distinct(alias, var)
+
+
+class FilteredStats:
+    """Statistics view for a query carrying equality selections (the serving
+    path's plan *templates*: `v = ?` with the constant lifted out of the
+    plan). A filtered variable contributes exactly one distinct value, and
+    every atom containing it shrinks by that column's selectivity
+    (size / distinct), so capacity planning sizes frontier buffers for the
+    *selected* slice instead of the whole relation — the difference between
+    a batched probe lane costing O(rows-matching-constant) and
+    O(all-rows). Deliberately value-agnostic: the estimates depend only on
+    WHICH vars are filtered, never on the constants, so every query of a
+    template shares one plan and one executor.
+
+    `filtered` maps alias -> the set of that atom's filtered vars. Plan
+    choice (optimize) should keep using the unfiltered base stats — the
+    binary plan must be template-stable too; this view feeds capacity
+    planning, where an under-estimate is recovered by the adaptive runner's
+    exact-need growth."""
+
+    def __init__(self, base, filtered: dict[str, frozenset[str]]):
+        self.base = base
+        self.filtered = {a: frozenset(vs) for a, vs in filtered.items() if vs}
+
+    def size(self, alias: str) -> int:
+        s = float(max(1, self.base.size(alias)))
+        for v in self.filtered.get(alias, ()):
+            s /= max(1.0, self.base.distinct(alias, v))
+        return int(max(1.0, math.ceil(s)))
+
+    def distinct(self, alias: str, var: str) -> float:
+        if var in self.filtered.get(alias, frozenset()):
+            return 1.0
+        return float(min(self.base.distinct(alias, var), max(1, self.size(alias))))
 
 
 def stage_est(atoms: list[Atom], stats) -> Est:

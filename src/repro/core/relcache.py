@@ -70,18 +70,32 @@ class KeyedCache:
     `put(key, value, rels)` stores value under `key` (which should embed
     `id(r)` for each r in rels to make identity part of the key) and
     arranges for the entry to be evicted when any of `rels` is collected.
+
+    `hits`/`misses` count every get() outcome — the observable contract
+    serving tests lock ("N queries, one compile" shows up as one miss and
+    N-1 hits). `scoped(tag)` returns a view whose keys live under `tag` in
+    the same bounded store, so independent keying disciplines (verbatim
+    runner keys vs canonicalized template keys) can share one cache without
+    ever colliding.
     """
 
     def __init__(self, max_entries: int = 64):
         self.max_entries = max_entries
         self._data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
 
     def get(self, key):
         hit = self._data.get(key)
         if hit is None:
+            self.misses += 1
             return None
+        self.hits += 1
         self._data.move_to_end(key)
         return hit[0]
+
+    def scoped(self, tag: str) -> "ScopedCache":
+        return ScopedCache(self, tag)
 
     def put(self, key, value, rels=()) -> None:
         old = self._data.pop(key, None)
@@ -109,6 +123,31 @@ class KeyedCache:
             for fin in fins:
                 fin.detach()
         self._data.clear()
+
+
+class ScopedCache:
+    """Namespace view over a KeyedCache: every key is stored as
+    (tag, key), sharing the parent's LRU bound, finalizer discipline, and
+    hit/miss counters. Used to give template-canonicalized runner keys
+    their own namespace inside the runner cache."""
+
+    def __init__(self, parent: KeyedCache, tag: str):
+        self._parent = parent
+        self._tag = tag
+
+    def get(self, key):
+        return self._parent.get((self._tag, key))
+
+    def put(self, key, value, rels=()) -> None:
+        self._parent.put((self._tag, key), value, rels)
+
+    @property
+    def hits(self) -> int:
+        return self._parent.hits
+
+    @property
+    def misses(self) -> int:
+        return self._parent.misses
 
 
 # the process-wide registry every compiled-path cache hangs off

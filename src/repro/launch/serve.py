@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs import ARCHS, get_arch
 from repro.models.transformer import init_params
-from repro.serve import Request, ServeEngine
+from repro.serve import DecodeServeEngine, Request
 
 
 def main(argv=None):
@@ -27,7 +27,7 @@ def main(argv=None):
     spec = get_arch(args.arch)
     cfg = spec.reduced
     params = init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len)
+    eng = DecodeServeEngine(params, cfg, slots=args.slots, max_len=args.max_len)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, int(rng.integers(2, 12))).astype(np.int32)

@@ -1,4 +1,35 @@
-from repro.serve.engine import Request, ServeEngine
-from repro.serve.paged_kv import PagedAllocator
+"""Serving: two engines, one shape discipline.
 
-__all__ = ["Request", "ServeEngine", "PagedAllocator"]
+* **DecodeServeEngine** (engine.py) serves *model decode*: continuous
+  batching of LLM requests into fixed decode slots with a paged KV cache.
+  `ServeEngine` remains as a deprecated alias of this class.
+* **JoinServeEngine** (join_engine.py) serves *join queries*: concurrent
+  tenants' queries are canonicalized into plan templates
+  (templates.canonicalize — alias alpha-renaming + constant lifting),
+  co-template requests are dispatched as one vmapped probe over shared
+  cached tries, and admission control (admission.py) rejects
+  quota-violating queries instead of letting them trigger grow/recompile
+  storms. See serve/README.md for the quota knobs.
+
+Both engines keep the batch shape static and vary only occupancy — the
+TPU serving discipline the rest of the repo compiles against.
+"""
+from repro.serve.admission import AdmissionController, AdmissionError, QueryQuota
+from repro.serve.engine import DecodeServeEngine, Request, ServeEngine
+from repro.serve.join_engine import JoinRequest, JoinServeEngine
+from repro.serve.paged_kv import PagedAllocator
+from repro.serve.templates import PlanTemplate, canonicalize
+
+__all__ = [
+    "AdmissionController",
+    "AdmissionError",
+    "DecodeServeEngine",
+    "JoinRequest",
+    "JoinServeEngine",
+    "PagedAllocator",
+    "PlanTemplate",
+    "QueryQuota",
+    "Request",
+    "ServeEngine",
+    "canonicalize",
+]

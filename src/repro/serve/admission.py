@@ -1,0 +1,89 @@
+"""Admission control for the join serving engine.
+
+A multi-tenant engine's worst failure mode is not a slow query — it is a
+query whose frontier buffers blow past their planned capacities, because
+recovery (grow + recompile + re-run) stalls every co-batched request
+behind one tenant's pathology. Admission control converts that stall into
+a bounded, attributable rejection, at three layers:
+
+1. **pre-compile** (`max_plan_cells`): the capacity planner's total
+   buffer-cell count is known before the executor ever compiles, so an
+   oversized template is rejected with zero XLA work.
+2. **runtime growth quota** (`max_node_capacity`): the adaptive runner
+   refuses to grow any single node past this bound, raising
+   `core.capacity.CapacityQuotaError` naming the offending batch lane —
+   the engine evicts that one request and re-dispatches the rest against
+   the *existing* compiled executor (no recompile).
+3. **retry budget** (`max_retries`): eviction rounds per dispatch are
+   bounded, so even adversarial batches terminate.
+
+Quotas are per-tenant (`AdmissionController.quota`), falling back to a
+default; counters (`admitted`/`rejected`) are the observable contract the
+serving tests and benchmark lock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+class AdmissionError(RuntimeError):
+    """A request was refused by admission control (quota violation)."""
+
+    def __init__(self, msg: str, *, tenant: str = "default", reason: str = "quota"):
+        super().__init__(msg)
+        self.tenant = tenant
+        self.reason = reason
+
+
+@dataclass(frozen=True)
+class QueryQuota:
+    """Per-query resource quota. None disables a bound.
+
+    max_plan_cells: ceiling on the capacity plan's total buffer cells
+    (sum of per-node capacities across all stages) — checked before the
+    first compile. max_node_capacity: ceiling any single frontier buffer
+    may grow to at runtime (armed inside the adaptive runner). max_retries:
+    quota-eviction rounds allowed per batched dispatch."""
+
+    max_plan_cells: int | None = None
+    max_node_capacity: int | None = None
+    max_retries: int = 3
+
+
+class AdmissionController:
+    """Per-tenant quota book-keeping: `quota(tenant)` resolves the
+    effective QueryQuota, `check_plan(...)` performs the pre-compile cells
+    test, and admitted/rejected count every decision."""
+
+    def __init__(
+        self,
+        default: QueryQuota | None = None,
+        per_tenant: dict[str, QueryQuota] | None = None,
+    ):
+        self.default = default or QueryQuota()
+        self.per_tenant = dict(per_tenant or {})
+        self.admitted = 0
+        self.rejected = 0
+
+    def quota(self, tenant: str) -> QueryQuota:
+        return self.per_tenant.get(tenant, self.default)
+
+    def check_plan(self, tenant: str, plan_cells: int) -> None:
+        """Pre-compile admission: reject if the planned buffer footprint
+        exceeds the tenant's cells quota. Raises AdmissionError (and counts
+        the rejection); otherwise counts an admission."""
+        q = self.quota(tenant)
+        if q.max_plan_cells is not None and plan_cells > q.max_plan_cells:
+            self.rejected += 1
+            raise AdmissionError(
+                f"plan footprint {plan_cells} cells exceeds tenant {tenant!r} "
+                f"quota of {q.max_plan_cells}",
+                tenant=tenant,
+                reason="plan_cells",
+            )
+        self.admitted += 1
+
+    def reject_runtime(self, tenant: str) -> None:
+        """Count a runtime (growth-quota) eviction. The raise site is the
+        adaptive runner; the engine calls this when it evicts the lane."""
+        self.rejected += 1

@@ -1,4 +1,5 @@
-"""Continuous-batching serve engine.
+"""Continuous-batching *decode* serve engine (the LLM stack — join-query
+serving lives in repro.serve.join_engine).
 
 Fixed-width decode slots (static shapes for jit) + host control plane:
 admit requests into free slots (prefill writes their KV), decode all active
@@ -28,7 +29,7 @@ class Request:
     done: bool = False
 
 
-class ServeEngine:
+class DecodeServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int, max_len: int, greedy: bool = True):
         self.params = params
         self.cfg = cfg
@@ -104,3 +105,8 @@ class ServeEngine:
     def run(self, max_steps: int = 10_000) -> None:
         while (self.queue or any(self.active)) and self.steps < max_steps:
             self.step()
+
+
+# the pre-rename public name; kept one release so external callers keep
+# importing while the join engine takes over the generic "serving" slot
+ServeEngine = DecodeServeEngine

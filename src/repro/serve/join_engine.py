@@ -1,0 +1,226 @@
+"""Multi-tenant join-query serving over the compiled Free Join path.
+
+The decode engine next door (engine.py) serves token streams; this engine
+serves *queries*. Same TPU discipline, different payload: fixed-width
+request slots so the compiled executor never changes shape, an occupancy
+mask instead of a varying batch, and a host control plane that admits,
+groups, dispatches, and retires.
+
+The pipeline per `step()`:
+
+1. **Group by template.** Every submitted request was canonicalized on
+   arrival (templates.canonicalize): alpha-renamed aliases, constants
+   lifted out. Requests sharing a template key — however differently
+   their tenants spelled the query — are batchable against ONE compiled
+   runner.
+2. **Admit.** The runner's capacity plan is known before any compile;
+   each request is checked against its tenant's `max_plan_cells` quota
+   and rejected with zero XLA work on violation.
+3. **Dispatch one vmapped probe.** Up to `slots` co-template requests run
+   as one batched executor call over the shared cached tries: the int32
+   constants matrix (slots, F) is the only per-lane input. Dead slots
+   are padded with a live lane's constants (they compute a duplicate
+   answer that is simply not read back).
+4. **Evict on quota.** If the adaptive runner raises CapacityQuotaError,
+   the named lane's request is rejected, its slot re-padded, and the
+   remaining requests re-dispatched against the same compiled executor —
+   co-batched tenants never pay a recompile for a pathological neighbor.
+
+Filterless templates (F=0) have nothing to vary per lane, so the whole
+group is served by ONE unbatched call whose result every member shares —
+degenerate batching, and the cheapest possible kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.core import api
+from repro.core.api import ExecOptions, _acquire_runner
+from repro.core.capacity import CapacityQuotaError
+from repro.relational.relation import Relation
+from repro.relational.schema import Query
+from repro.serve.admission import AdmissionController, AdmissionError
+from repro.serve.templates import PlanTemplate, canonicalize
+
+
+@dataclasses.dataclass
+class JoinRequest:
+    rid: int
+    tenant: str
+    template: PlanTemplate
+    consts: np.ndarray  # (F,) int32 — the lifted selection constants
+    result: object = None
+    error: Exception | None = None
+    done: bool = False
+
+
+class JoinServeEngine:
+    """Concurrent join serving: submit() canonicalizes, step() batches.
+
+    slots: fixed dispatch width — every batched runner is compiled at this
+    width once and reused for any group size up to it. options: compiled-
+    path ExecOptions shared by all templates this engine builds (a request
+    may still carry its own via canonicalize). admission: quota controller
+    (default: no quotas). The engine keys its runners in a scoped
+    namespace of the process runner cache, so template-canonicalized keys
+    can never collide with compiled_free_join's verbatim keys."""
+
+    def __init__(
+        self,
+        *,
+        slots: int = 8,
+        options: ExecOptions | None = None,
+        admission: AdmissionController | None = None,
+        cache=None,
+    ):
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        self.slots = slots
+        self.options = options or ExecOptions()
+        self.admission = admission or AdmissionController()
+        self._cache = (cache if cache is not None else api._runner_cache).scoped("join-templates")
+        self.queue: deque[JoinRequest] = deque()
+        self._next_rid = 0
+        self.dispatches = 0  # batched executor calls issued
+        self.served = 0  # requests completed successfully
+
+    # ---- intake -------------------------------------------------------
+    def submit(
+        self,
+        query: Query,
+        relations: dict[str, Relation],
+        filters: dict[str, int] | None = None,
+        *,
+        tenant: str = "default",
+        agg: str | None = "count",
+        plan_tree=None,
+    ) -> JoinRequest:
+        """Canonicalize and enqueue one query; returns its JoinRequest
+        handle (result/error/done are filled by step())."""
+        template, consts = canonicalize(
+            query, relations, filters, plan_tree=plan_tree, agg=agg, options=self.options
+        )
+        req = JoinRequest(rid=self._next_rid, tenant=tenant, template=template, consts=consts)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    # ---- serving loop -------------------------------------------------
+    def step(self) -> list[JoinRequest]:
+        """One engine iteration: take the head-of-line request's template,
+        pull every queued co-template request into up to `slots` lanes, and
+        serve them with one dispatch. Returns the requests retired this
+        step (completed or rejected)."""
+        if not self.queue:
+            return []
+        head = self.queue[0]
+        group: list[JoinRequest] = []
+        rest: deque[JoinRequest] = deque()
+        while self.queue:
+            r = self.queue.popleft()
+            if r.template == head.template and len(group) < self.slots:
+                group.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
+        self._serve_group(head.template, group)
+        return group
+
+    def run(self, max_steps: int = 10_000) -> list[JoinRequest]:
+        """Drain the queue; returns every retired request in retire order."""
+        out: list[JoinRequest] = []
+        steps = 0
+        while self.queue and steps < max_steps:
+            out.extend(self.step())
+            steps += 1
+        return out
+
+    # ---- internals ----------------------------------------------------
+    def _reject(self, req: JoinRequest, err: Exception) -> None:
+        req.error = err
+        req.done = True
+
+    def _serve_group(self, template: PlanTemplate, group: list[JoinRequest]) -> None:
+        t = template
+        batch = self.slots if t.filter_vars else None
+        runner, rels, _ = _acquire_runner(
+            t.query,
+            t.relations,
+            t.plan_tree,
+            agg=t.agg,
+            options=t.options,
+            filter_vars=t.filter_vars,
+            batch=batch,
+            max_capacity=self._group_capacity_quota(group),
+            cache=self._cache,
+        )
+        # pre-compile admission: the capacity plan exists, the executor
+        # does not yet — a cells violation costs zero XLA work
+        live: list[JoinRequest] = []
+        cells = runner.cap_plan.cells()
+        for req in group:
+            try:
+                self.admission.check_plan(req.tenant, cells)
+            except AdmissionError as e:
+                self._reject(req, e)
+            else:
+                live.append(req)
+        if not live:
+            return
+        if not t.filter_vars:
+            # nothing varies per lane: one unbatched call answers everyone
+            out = runner.run_relations(rels, reuse_tries=True)
+            self.dispatches += 1
+            for req in live:
+                req.result, req.done = out, True
+                self.served += 1
+            return
+        retries = max(self.admission.quota(r.tenant).max_retries for r in live)
+        for _round in range(retries + 1):
+            consts = np.broadcast_to(live[0].consts, (self.slots, len(t.filter_vars))).copy()
+            for i, req in enumerate(live):
+                consts[i] = req.consts  # dead slots keep lane 0's constants
+            try:
+                out = runner.run_relations(rels, reuse_tries=True, filter_consts=consts)
+            except CapacityQuotaError as e:
+                self.dispatches += 1
+                victim = live[e.lane] if e.lane is not None and e.lane < len(live) else live[0]
+                self.admission.reject_runtime(victim.tenant)
+                self._reject(victim, e)
+                live = [r for r in live if r is not victim]
+                if not live:
+                    return
+                continue
+            self.dispatches += 1
+            for i, req in enumerate(live):
+                req.result = int(out[i]) if t.agg == "count" else out[i]
+                req.done = True
+                self.served += 1
+            return
+        # retry budget exhausted: reject whatever is still unserved
+        for req in live:
+            self.admission.reject_runtime(req.tenant)
+            self._reject(
+                req,
+                AdmissionError(
+                    "retry budget exhausted for batched dispatch",
+                    tenant=req.tenant,
+                    reason="retries",
+                ),
+            )
+
+    def _group_capacity_quota(self, group: list[JoinRequest]) -> int | None:
+        """The runtime growth quota armed on the group's runner: the max of
+        the members' per-node capacity quotas (the loosest bound — a raise
+        still names the offending lane, and tighter per-tenant bounds are
+        re-checked against the violation's need on eviction). None if no
+        member carries one."""
+        caps = [
+            q.max_node_capacity
+            for q in (self.admission.quota(r.tenant) for r in group)
+            if q.max_node_capacity is not None
+        ]
+        return max(caps) if caps else None

@@ -1,0 +1,245 @@
+"""Multi-tenant join serving: template canonicalization, batched
+dispatch, admission control, and the redesigned ExecOptions surface."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import ExecOptions, compiled_free_join, free_join, to_sorted_tuples
+from repro.core.relcache import KeyedCache
+from repro.relational.schema import Atom, Query, triangle_query
+from repro.serve import (
+    AdmissionController,
+    AdmissionError,
+    DecodeServeEngine,
+    JoinServeEngine,
+    QueryQuota,
+    ServeEngine,
+    canonicalize,
+)
+from tests.conftest import rand_rel
+
+
+def _triangle(rng, n=300, dom=6):
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, n, dom) for a in q.atoms}
+    return q, rels
+
+
+def _respell(q, rels, tag, order=None):
+    """The same query as tenant `tag` would write it: its own alias names,
+    its own atom order, over the same base relations."""
+    atoms = [Atom(a.name, a.vars, f"{tag}_{a.alias}") for a in q.atoms]
+    if order is not None:
+        atoms = [atoms[i] for i in order]
+    qi = Query(atoms)
+    ri = {f"{tag}_{a.alias}": rels[a.alias] for a in q.atoms}
+    return qi, ri
+
+
+def _cached_runners(kc: KeyedCache):
+    return [v[0] for v in kc._data.values()]
+
+
+# ---- template canonicalization -----------------------------------------
+
+
+def test_alpha_equivalent_spellings_share_one_template(rng):
+    q, rels = _triangle(rng)
+    t0, c0 = canonicalize(q, rels, {"x": 3})
+    # different aliases, different constants
+    q1, r1 = _respell(q, rels, "tenantA")
+    t1, c1 = canonicalize(q1, r1, {"x": 5})
+    # different atom order too (head order shifts with first appearance)
+    q2, r2 = _respell(q, rels, "tenantB", order=[2, 0, 1])
+    t2, c2 = canonicalize(q2, r2, {"x": 4})
+    assert t0.key == t1.key == t2.key
+    assert [int(c) for c in (c0[0], c1[0], c2[0])] == [3, 5, 4]
+    # explicit head spellings of the same projection collapse as well
+    t3, _ = canonicalize(Query(list(q.atoms), head=("z", "y", "x")), rels, {"x": 3})
+    assert t3.key == t0.key
+
+
+def test_real_differences_split_templates(rng):
+    q, rels = _triangle(rng)
+    base, _ = canonicalize(q, rels, {"x": 3})
+    # different head SET
+    proj, _ = canonicalize(Query(list(q.atoms), head=("x", "y")), rels, {"x": 3})
+    assert proj.key != base.key
+    # different aggregate
+    cnt, _ = canonicalize(q, rels, {"x": 3}, agg="count")
+    full, _ = canonicalize(q, rels, {"x": 3}, agg=None)
+    assert cnt.key != full.key
+    # different ExecOptions
+    opt, _ = canonicalize(q, rels, {"x": 3}, options=ExecOptions(budget=64))
+    assert opt.key != base.key
+    # different filtered-variable set (same constant count)
+    fy, _ = canonicalize(q, rels, {"y": 3})
+    assert fy.key != base.key
+    # same spelling over different base relations
+    rng2 = np.random.default_rng(7)
+    _, rels2 = _triangle(rng2)
+    other, _ = canonicalize(q, rels2, {"x": 3})
+    assert other.key != base.key
+
+
+def test_filter_var_must_exist(rng):
+    q, rels = _triangle(rng)
+    with pytest.raises(ValueError, match="filter vars"):
+        canonicalize(q, rels, {"nope": 1})
+
+
+# ---- one compile across N ----------------------------------------------
+
+
+def test_two_spellings_one_compiled_runner(rng):
+    """The acceptance bar: alpha-equivalent queries with different
+    constants compile exactly one probe runner, visible in the cache
+    hit/miss counters and the runner's own compile count."""
+    q, rels = _triangle(rng)
+    kc = KeyedCache()
+    eng = JoinServeEngine(slots=1, cache=kc)  # slots=1: each request is
+    # its own dispatch, so a shared runner can only come from the cache
+    qa, ra = _respell(q, rels, "a")
+    qb, rb = _respell(q, rels, "b", order=[1, 2, 0])
+    r0 = eng.submit(qa, ra, {"x": 2}, tenant="a")
+    r1 = eng.submit(qb, rb, {"x": 4}, tenant="b")
+    eng.step()  # serves r0: one cache miss, cold compile (+ any growth)
+    assert kc.misses == 1 and kc.hits == 0
+    (runner,) = _cached_runners(kc)
+    cold_compiles = runner.compiles
+    eng.step()  # serves r1: pure cache hit, zero new compiles
+    assert kc.misses == 1 and kc.hits == 1
+    assert runner.compiles == cold_compiles
+    for req, c in ((r0, 2), (r1, 4)):
+        assert req.done and req.error is None
+        assert req.result == free_join(q, rels, agg="count", filters={"x": c})
+
+
+# ---- batched dispatch ---------------------------------------------------
+
+
+def test_batched_counts_match_eager(rng):
+    q, rels = _triangle(rng)
+    consts = [0, 1, 2, 3, 4, 5, 0, 3]
+    eng = JoinServeEngine(slots=4)
+    reqs = [
+        eng.submit(*_respell(q, rels, f"t{i}"), {"x": c}, tenant=f"t{i}")
+        for i, c in enumerate(consts)
+    ]
+    eng.run()
+    assert eng.dispatches == 2  # 8 co-template requests at width 4
+    for req, c in zip(reqs, consts):
+        assert req.error is None
+        assert req.result == free_join(q, rels, agg="count", filters={"x": c})
+
+
+def test_batched_full_results_match_eager(rng):
+    q, rels = _triangle(rng, n=150, dom=5)
+    eng = JoinServeEngine(slots=4)
+    consts = [0, 1, 2]
+    reqs = [
+        eng.submit(*_respell(q, rels, f"t{i}"), {"x": c}, tenant=f"t{i}", agg=None)
+        for i, c in enumerate(consts)
+    ]
+    eng.run()
+    for req, c in zip(reqs, consts):
+        assert req.error is None
+        got = to_sorted_tuples(req.result, q.head)
+        want = to_sorted_tuples(free_join(q, rels, filters={"x": c}), q.head)
+        assert got == want
+
+
+def test_filterless_group_shares_one_call(rng):
+    q, rels = _triangle(rng)
+    eng = JoinServeEngine(slots=4)
+    reqs = [eng.submit(*_respell(q, rels, f"t{i}"), tenant=f"t{i}") for i in range(4)]
+    eng.run()
+    assert eng.dispatches == 1
+    want = free_join(q, rels, agg="count")
+    assert [r.result for r in reqs] == [want] * 4
+
+
+def test_distinct_templates_are_separate_groups(rng):
+    q, rels = _triangle(rng)
+    eng = JoinServeEngine(slots=8)
+    ra = eng.submit(*_respell(q, rels, "a"), {"x": 1})
+    rb = eng.submit(*_respell(q, rels, "b"), {"y": 1})  # different filter set
+    retired = eng.step()
+    assert retired == [ra] and not rb.done
+    eng.run()
+    assert rb.result == free_join(q, rels, agg="count", filters={"y": 1})
+
+
+# ---- admission control --------------------------------------------------
+
+
+def test_plan_cells_rejection_spares_cobatched(rng):
+    """A quota-violating tenant is rejected pre-compile; co-batched
+    tenants are served by the same single compile."""
+    q, rels = _triangle(rng)
+    adm = AdmissionController(per_tenant={"small": QueryQuota(max_plan_cells=1)})
+    kc = KeyedCache()
+    eng = JoinServeEngine(slots=4, admission=adm, cache=kc)
+    ra = eng.submit(*_respell(q, rels, "a"), {"x": 1}, tenant="a")
+    rs = eng.submit(*_respell(q, rels, "s"), {"x": 2}, tenant="small")
+    rb = eng.submit(*_respell(q, rels, "b"), {"x": 3}, tenant="b")
+    eng.run()
+    assert isinstance(rs.error, AdmissionError) and rs.error.reason == "plan_cells"
+    assert rs.result is None and rs.done
+    for req, c in ((ra, 1), (rb, 3)):
+        assert req.error is None
+        assert req.result == free_join(q, rels, agg="count", filters={"x": c})
+    assert adm.rejected == 1 and adm.admitted == 2
+    (runner,) = _cached_runners(kc)
+    compiles0, dispatches0 = runner.compiles, eng.dispatches
+    # a repeat offender is rejected with zero XLA work and zero dispatches
+    rs2 = eng.submit(*_respell(q, rels, "s2"), {"x": 4}, tenant="small")
+    eng.run()
+    assert isinstance(rs2.error, AdmissionError) and rs2.error.reason == "plan_cells"
+    assert runner.compiles == compiles0 and eng.dispatches == dispatches0
+
+
+def test_admission_counters_and_quota_resolution():
+    adm = AdmissionController(
+        default=QueryQuota(max_plan_cells=100),
+        per_tenant={"vip": QueryQuota()},
+    )
+    adm.check_plan("vip", 10**9)  # vip: unbounded
+    with pytest.raises(AdmissionError) as ei:
+        adm.check_plan("anon", 101)
+    assert ei.value.tenant == "anon" and ei.value.reason == "plan_cells"
+    adm.check_plan("anon", 100)
+    assert adm.admitted == 2 and adm.rejected == 1
+
+
+# ---- the redesigned options surface ------------------------------------
+
+
+def test_legacy_kwargs_warn_and_match_options(rng):
+    q, rels = _triangle(rng)
+    with pytest.warns(DeprecationWarning, match="budget"):
+        c_legacy = compiled_free_join(q, rels, budget=16)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # the options path must be silent
+        c_opts = compiled_free_join(q, rels, options=ExecOptions(budget=16))
+    assert c_legacy == c_opts == free_join(q, rels, agg="count")
+
+
+def test_free_join_compiled_rejects_eager_knobs(rng):
+    q, rels = _triangle(rng)
+    with pytest.raises(ValueError, match="mode"):
+        free_join(q, rels, mode="simple", agg="count", compiled=True)
+    with pytest.raises(ValueError, match="dynamic_cover"):
+        free_join(q, rels, dynamic_cover=False, agg="count", compiled=True)
+    # and the eager path rejects the compiled-only options
+    with pytest.raises(ValueError, match="compiled path"):
+        free_join(q, rels, agg="count", options=ExecOptions())
+    # valid compiled delegation still works
+    assert free_join(q, rels, agg="count", compiled=True) == free_join(
+        q, rels, agg="count"
+    )
+
+
+def test_decode_engine_rename_keeps_alias():
+    assert ServeEngine is DecodeServeEngine

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.models.transformer import ModelConfig, init_params
-from repro.serve import PagedAllocator, Request, ServeEngine
+from repro.serve import DecodeServeEngine, PagedAllocator, Request
 from repro.train import AdamWConfig, TrainConfig, checkpoint, make_train_step
 from repro.train.data import DataConfig, markov_batch, select_corpus_samples, synthetic_batch
 from repro.train.optimizer import apply_updates, init_state, schedule
@@ -188,7 +188,7 @@ def test_straggler_monitor_evicts_persistent_offender():
 
 def test_serve_engine_completes_all_requests():
     params = init_params(jax.random.PRNGKey(0), CFG)
-    eng = ServeEngine(params, CFG, slots=3, max_len=32)
+    eng = DecodeServeEngine(params, CFG, slots=3, max_len=32)
     rng = np.random.default_rng(0)
     reqs = [
         Request(rid=i, prompt=rng.integers(0, 64, 3).astype(np.int32), max_new=4) for i in range(5)
