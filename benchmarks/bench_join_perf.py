@@ -38,6 +38,14 @@ path query, eager vs the PR 3 hybrid (non-root stages on the eager host
 engine per call, root compiled) vs the fully-compiled chain (every stage
 on device inside one AdaptiveExecutor call).
 
+Part 5 — plan choice (PR 7): greedy left-deep (optimize_level=0) vs the
+cost-based bushy enumeration (optimize_level=2) on a four-relation chain
+with selective end joins and a dense middle join. The greedy search can
+only extend left-deep, so it drags the dense A⋈B⋈C intermediate through
+the rest of the plan; the DP brackets it as (A⋈B)⋈(C⋈D) and the device
+cost model picks that. Warm steady state (runners built once, tries
+cached), interleaved timing.
+
 The rows also land in BENCH_join_perf.json (repo root) so the perf
 trajectory of the compiled path is tracked PR-over-PR.
 """
@@ -51,7 +59,7 @@ import numpy as np
 import jax
 
 from benchmarks.common import timeit
-from repro.core import binary2fj, factor, free_join
+from repro.core import ExecOptions, binary2fj, factor, free_join
 from repro.core.capacity import plan_capacities
 from repro.core.compiled import AdaptiveExecutor, make_count_fn, relations_to_cols
 from repro.core.plan import BinaryPlan
@@ -169,6 +177,7 @@ def run(repeats: int = 3, smoke: bool = False):
     rows.extend(run_compiled_vs_eager(repeats=repeats, smoke=smoke))
     rows.extend(run_distributed(repeats=repeats, smoke=smoke))
     rows.extend(run_bushy(repeats=repeats, smoke=smoke))
+    rows.extend(run_planner(repeats=repeats, smoke=smoke))
     return rows
 
 
@@ -329,6 +338,86 @@ def run_bushy(repeats: int = 3, smoke: bool = False, path: str = "BENCH_join_per
         "bushy_chained_speedup_vs_hybrid": th / tc,
         "bushy_chain_plan": str(info_c["cap_plan"]),
         "bushy_retries": info_c["retries"],
+    }
+    import os
+
+    if os.path.exists(path):
+        with open(path) as f:
+            full = json.load(f)
+        full.update(record)
+        with open(path, "w") as f:
+            json.dump(full, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+def _selective_ends_chain(n=50_000, dense_dom=1_000, sel_dom=None, seed=0):
+    """Chain A(a,b) B(b,c) C(c,d) D(d,e): b and d join keys as selective as
+    the relations are wide (|A⋈B| ~ |A|), c dense (|B⋈C| ~ n^2/dense_dom).
+    The left-deep intermediate A⋈B⋈C is ~n/dense_dom times the bushy
+    stages' — the workload the enumeration exists for."""
+    rng = np.random.default_rng(seed)
+    sel_dom = sel_dom or n
+    rels = {
+        "A": Relation("A", {"a": rng.integers(0, n, n), "b": rng.integers(0, sel_dom, n)}),
+        "B": Relation("B", {"b": rng.integers(0, sel_dom, n), "c": rng.integers(0, dense_dom, n)}),
+        "C": Relation("C", {"c": rng.integers(0, dense_dom, n), "d": rng.integers(0, sel_dom, n)}),
+        "D": Relation("D", {"d": rng.integers(0, sel_dom, n), "e": rng.integers(0, n, n)}),
+    }
+    q = Query(
+        [Atom("A", ("a", "b")), Atom("B", ("b", "c")), Atom("C", ("c", "d")), Atom("D", ("d", "e"))]
+    )
+    return q, rels
+
+
+def run_planner(repeats: int = 3, smoke: bool = False, path: str = "BENCH_join_perf.json"):
+    """Part 5: greedy left-deep vs cost-based bushy enumeration, warm
+    steady state. Both plans are chosen by the optimizer (no hand-written
+    tree); full runs append plan_* fields to BENCH_join_perf.json."""
+    from repro.core import compiled_free_join
+    from repro.core import relcache
+
+    q, rels = _selective_ends_chain(n=5_000, dense_dom=100) if smoke else _selective_ends_chain()
+    relcache.FEEDBACK.clear()  # cold-plan comparison: estimates only
+    runners, trees = {}, {}
+    for name, level in (("greedy", 0), ("enumerated", 2)):
+        info = {}
+        compiled_free_join(
+            q, rels, agg="count", options=ExecOptions(optimize_level=level), info=info
+        )
+        runners[name], trees[name] = info["runner"], info["plan_tree"]
+    assert str(trees["greedy"]) != str(trees["enumerated"]), (
+        "the enumeration found nothing beyond greedy on its showcase workload"
+    )
+    # interleaved best-of-N (see run_bushy): warm probe cost only
+    paths = [
+        lambda: runners["greedy"].run_relations(rels, reuse_tries=True),
+        lambda: runners["enumerated"].run_relations(rels, reuse_tries=True),
+    ]
+    counts = [fn() for fn in paths]  # warmup
+    assert counts[0] == counts[1], counts
+    best = [float("inf")] * 2
+    for _ in range(max(3, repeats)):
+        for i, fn in enumerate(paths):
+            t0 = time.perf_counter()
+            counts[i] = fn()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    tg, tn = best
+    rows = [
+        {"name": "joinperf.plan_greedy", "us": tg * 1e6, "derived": f"count={counts[0]}"},
+        {"name": "joinperf.plan_enumerated", "us": tn * 1e6,
+         "derived": f"speedup_vs_greedy={tg / tn:.2f}x"},
+    ]
+    if smoke:
+        return rows
+    record = {
+        "plan_query": "chain A(a,b) B(b,c) C(c,d) D(d,e), dense c, selective b/d",
+        "plan_count": counts[0],
+        "plan_greedy_us": tg * 1e6,
+        "plan_enumerated_us": tn * 1e6,
+        "plan_enumerated_speedup": tg / tn,
+        "plan_greedy_tree": str(trees["greedy"]),
+        "plan_enumerated_tree": str(trees["enumerated"]),
     }
     import os
 

@@ -1,0 +1,128 @@
+"""PR-over-PR perf trajectory: a committed history of bench-smoke rows.
+
+BENCH_join_perf.json keeps only the latest full-scale record; the CI
+regression gate only answers "did THIS run slip >2x". Neither shows the
+trend. This module maintains ``benchmarks/results/history.csv`` —
+``commit,name,us`` rows, one block per commit — and renders it as a
+markdown trend table for the CI job summary.
+
+  PYTHONPATH=src python -m benchmarks.perf_history append \
+      benchmarks/results/latest.csv benchmarks/results/history.csv
+  PYTHONPATH=src python -m benchmarks.perf_history table \
+      benchmarks/results/history.csv
+
+``append`` keys the rows by --commit (default: git short HEAD) and
+replaces any existing block for the same commit, so re-runs don't
+duplicate. The committed file grows one block per PR (append locally from
+a bench-smoke run, commit alongside the change); CI appends its own run
+ephemerally so the job-summary table always ends with the commit under
+test. Rows named ``*_qps`` are throughputs (higher is better), everything
+else is µs per call (lower is better); the Δ column colors accordingly.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+from benchmarks.check_regression import read_csv
+
+HEADER = "commit,name,us\n"
+
+
+def read_history(path: str) -> tuple[list[str], dict[str, dict[str, float]]]:
+    """-> (commits in first-appearance order, {commit: {name: us}})."""
+    commits: list[str] = []
+    data: dict[str, dict[str, float]] = {}
+    if not os.path.exists(path):
+        return commits, data
+    with open(path) as f:
+        header = f.readline()
+        assert header.startswith("commit,"), f"unexpected history header: {header!r}"
+        for line in f:
+            parts = line.rstrip("\n").split(",", 2)
+            if len(parts) != 3 or not parts[0]:
+                continue
+            sha, name, us = parts
+            if sha not in data:
+                commits.append(sha)
+                data[sha] = {}
+            data[sha][name] = float(us)
+    return commits, data
+
+
+def append(csv_path: str, history_path: str, commit: str | None, prefix: str) -> int:
+    commit = commit or subprocess.run(
+        ["git", "rev-parse", "--short", "HEAD"], capture_output=True, text=True
+    ).stdout.strip()
+    assert commit, "no commit id: pass --commit or run inside a git checkout"
+    rows = {k: v for k, v in read_csv(csv_path).items() if k.startswith(prefix)}
+    assert rows, f"no rows with prefix {prefix!r} in {csv_path}"
+    commits, data = read_history(history_path)
+    if commit not in data:
+        commits.append(commit)
+    data[commit] = rows  # same commit re-run: replace, don't duplicate
+    os.makedirs(os.path.dirname(history_path) or ".", exist_ok=True)
+    with open(history_path, "w") as f:
+        f.write(HEADER)
+        for sha in commits:
+            for name, us in sorted(data[sha].items()):
+                f.write(f"{sha},{name},{us:.1f}\n")
+    print(f"{history_path}: {len(rows)} rows recorded for {commit} "
+          f"({len(commits)} commits tracked)")
+    return 0
+
+
+def _fmt(us: float | None, qps: bool) -> str:
+    if us is None:
+        return "—"
+    return f"{us:,.0f} qps" if qps else f"{us:,.0f} µs"
+
+
+def table(history_path: str, last: int, prefix: str) -> int:
+    commits, data = read_history(history_path)
+    if not commits:
+        print(f"(no perf history at {history_path})")
+        return 0
+    commits = commits[-last:]
+    names = sorted({n for sha in commits for n in data[sha] if n.startswith(prefix)})
+    out = ["### Perf trend (bench-smoke, µs per call; `*_qps` rows are throughput)", ""]
+    out.append("| bench | " + " | ".join(commits) + " | Δ last |")
+    out.append("|---" + "|---:" * (len(commits) + 1) + "|")
+    for name in names:
+        qps = name.endswith("_qps")
+        vals = [data[sha].get(name) for sha in commits]
+        delta = "—"
+        present = [v for v in vals if v is not None]
+        if len(present) >= 2 and present[-2]:
+            pct = (present[-1] - present[-2]) / present[-2] * 100.0
+            better = pct > 0 if qps else pct < 0
+            delta = f"{pct:+.1f}% {'✅' if better else '⚠️' if abs(pct) > 10 else ''}".rstrip()
+        out.append(
+            f"| {name} | " + " | ".join(_fmt(v, qps) for v in vals) + f" | {delta} |"
+        )
+    print("\n".join(out))
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    a = sub.add_parser("append", help="record a bench-smoke CSV under a commit id")
+    a.add_argument("csv")
+    a.add_argument("history")
+    a.add_argument("--commit", default=None)
+    a.add_argument("--prefix", default="joinperf.")
+    t = sub.add_parser("table", help="render the markdown trend table")
+    t.add_argument("history")
+    t.add_argument("--last", type=int, default=5)
+    t.add_argument("--prefix", default="joinperf.")
+    args = ap.parse_args()
+    if args.cmd == "append":
+        return append(args.csv, args.history, args.commit, args.prefix)
+    return table(args.history, args.last, args.prefix)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -135,6 +135,32 @@ def main():
     print(f"chain plan  : {info['cap_plan']}")
     assert cb == free_join(qb, relsb, bushy, agg="count")
 
+    # cost-based plan enumeration: no hand-written tree this time. The
+    # ExecOptions.optimize_level knob picks the plan-choice effort — 0 is
+    # the greedy left-deep search, 1 (default) enumerates bushy candidates
+    # by dynamic programming over connected subqueries and ranks them with
+    # a device cost model (frontier cells touched, AGM-capped), 2 makes the
+    # enumeration exhaustive and re-plans when measured cardinalities from
+    # earlier runs contradict the estimates. On this chain the middle join
+    # (b ⋈ c over a small domain) is dense while both end joins are
+    # selective: greedy must drag the dense intermediate left-deep, the
+    # enumeration brackets it bushy.
+    from repro.core import ExecOptions
+
+    relsd = {
+        "A": Relation("A", {"x": rng.integers(0, 1500, 1500), "y": rng.integers(0, 1500, 1500)}),
+        "B": Relation("B", {"y": rng.integers(0, 1500, 1500), "z": rng.integers(0, 12, 1500)}),
+        "C": Relation("C", {"z": rng.integers(0, 12, 1500), "w": rng.integers(0, 1500, 1500)}),
+        "D": Relation("D", {"w": rng.integers(0, 1500, 1500), "u": rng.integers(0, 1500, 1500)}),
+    }
+    print("\ncost-based plan enumeration (ExecOptions.optimize_level)")
+    for level in (0, 2):
+        info = {}
+        c = compiled_free_join(
+            qb, relsd, agg="count", options=ExecOptions(optimize_level=level), info=info
+        )
+        print(f"level {level}     : count={c}  plan={info['plan_tree']}")
+
     # multi-tenant serving loop: concurrent tenants send the SAME query in
     # different spellings (their own aliases) with their own selection
     # constants. JoinServeEngine canonicalizes each request into a plan

@@ -21,7 +21,15 @@ from repro.core.capacity import (
 from repro.core.colt import Colt
 from repro.core.compiled import AdaptiveExecutor, StaticSchedule, make_chain_executor
 from repro.core.engine import ExecStats, execute, materialize
-from repro.core.optimizer import Est, Stats, estimate_prefixes, optimize
+from repro.core.optimizer import (
+    Est,
+    JoinOrderOptimizer,
+    Stats,
+    device_cost,
+    estimate_prefixes,
+    optimize,
+)
+from repro.core.relcache import FEEDBACK, CardFeedback
 from repro.core.plan import (
     BinaryPlan,
     FreeJoinPlan,
@@ -40,6 +48,10 @@ __all__ = [
     "ChainCapacityPlan",
     "ExecOptions",
     "Est",
+    "FEEDBACK",
+    "CardFeedback",
+    "JoinOrderOptimizer",
+    "device_cost",
     "Stats",
     "StaticSchedule",
     "agm_bound",

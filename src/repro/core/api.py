@@ -31,12 +31,12 @@ from repro.core import engine, relcache
 from repro.core.plan import (
     BinaryPlan,
     FreeJoinPlan,
-    binary2fj,
-    factor,
+    decompose_tree,
     gj_plan,
+    stage_plans,
     var_order_from_fj,
 )
-from repro.core.optimizer import Stats, optimize
+from repro.core.optimizer import JoinOrderOptimizer, Stats, optimize
 from repro.relational.relation import Relation
 from repro.relational.schema import Atom, Query
 
@@ -53,7 +53,13 @@ class ExecOptions:
     cardinality estimates; compact_threshold: schedule compaction when the
     live fraction is estimated to drop below this; jit: jax.jit the
     executor; chain_stages: run every stage of a bushy plan on device
-    (False = the hybrid reference baseline)."""
+    (False = the hybrid reference baseline); optimize_level: plan-choice
+    effort when no plan tree is given — 0 is the greedy left-deep search,
+    1 (default) enumerates bushy candidates by dynamic programming, ranks
+    them with the device cost model under the standard budget, and pins
+    the winner for the life of the relations, 2 raises the enumeration
+    budget to exhaustive and re-plans when measured cardinalities
+    contradict the estimates (see optimizer.JoinOrderOptimizer)."""
 
     impl: str = "jnp"
     budget: int = 32
@@ -61,6 +67,7 @@ class ExecOptions:
     compact_threshold: float = 0.25
     jit: bool = True
     chain_stages: bool = True
+    optimize_level: int = 1
 
 
 # one release of backwards compatibility: compiled_free_join's old loose
@@ -80,40 +87,10 @@ def _resolve_options(options: ExecOptions | None, legacy: dict) -> ExecOptions:
     return replace(options or ExecOptions(), **given)
 
 
-def _stage_atoms(leaves, query: Query, stage_schemas: dict[str, tuple[str, ...]]):
-    atoms = []
-    for leaf in leaves:
-        if isinstance(leaf, Atom):
-            atoms.append(leaf)
-        else:
-            atoms.append(Atom(leaf, stage_schemas[leaf]))
-    return atoms
-
-
-def _decompose(plan_tree: BinaryPlan | Atom):
-    """Stages of a plan tree; a bare Atom (single-atom query) is its own
-    root stage."""
-    if isinstance(plan_tree, Atom):
-        return [("__root", [plan_tree])]
-    return plan_tree.decompose()
-
-
-def _stage_plans(query: Query, plan_tree, *, factorize: bool = True):
-    """Per-stage Free Join plans of a (possibly bushy) binary plan tree:
-    [(name, fj_plan)], root last. Each stage's plan is built over its own
-    sub-query (fj.query), whose head is the stage's output schema; later
-    stages reference earlier ones by name as ordinary atoms."""
-    stage_schemas: dict[str, tuple[str, ...]] = {}
-    out = []
-    for name, leaves in _decompose(plan_tree):
-        atoms = _stage_atoms(leaves, query, stage_schemas)
-        sub_q = Query(atoms)
-        fj = binary2fj(atoms, sub_q)
-        if factorize:
-            fj = factor(fj)
-        stage_schemas[name] = sub_q.head
-        out.append((name, fj))
-    return out
+# stage derivation lives in core/plan.py (the optimizer's device cost model
+# needs it too); the old private names stay importable
+_decompose = decompose_tree
+_stage_plans = stage_plans
 
 
 def _run_stages(
@@ -300,10 +277,13 @@ def _acquire_runner(
     quota (admission control). `cache` defaults to the verbatim runner
     cache — the serving engine passes its template-scoped namespace.
 
-    Returns (runner, rels, cacheable): rels is the relation dict the
-    runner should execute over (the hybrid baseline materializes its eager
-    stages into it), and cacheable=False marks hybrid multi-stage runs
-    whose per-call stage relations make caching useless."""
+    Returns (runner, rels, cacheable, plan_tree): rels is the relation
+    dict the runner should execute over (the hybrid baseline materializes
+    its eager stages into it), cacheable=False marks hybrid multi-stage
+    runs whose per-call stage relations make caching useless, and
+    plan_tree is the binary plan actually chosen (the caller's, or the
+    optimizer's — exposed so callers can observe feedback-driven
+    re-planning)."""
     from repro.core.capacity import plan_chain_capacities
     from repro.core.compiled import AdaptiveExecutor, _base_aliases
     from repro.core.optimizer import FilteredStats
@@ -312,7 +292,17 @@ def _acquire_runner(
     rels = dict(relations)
     stats = Stats(rels, cached=True)  # live view + registry-backed distincts
     if plan_tree is None:
-        plan_tree = optimize(query, rels, stats=stats)
+        # cost-based choice with the measured-cardinality feedback loop: a
+        # warm query whose first run contradicted the estimates re-plans
+        # here (the new plan keys a new runner; the choice itself is
+        # memoized against the feedback store's version, so steady state
+        # pays one cache probe)
+        plan_tree = JoinOrderOptimizer(
+            level=options.optimize_level,
+            safety=options.safety,
+            compact_threshold=options.compact_threshold,
+            feedback=relcache.FEEDBACK,
+        ).choose(query, rels, stats=stats)
     stages = _stage_plans(query, plan_tree)
     # the hybrid path materializes fresh stage relations per call — a cache
     # entry keyed on them could never hit (and its put would evict a live
@@ -350,6 +340,7 @@ def _acquire_runner(
             stats=pstats,
             safety=options.safety,
             compact_threshold=options.compact_threshold,
+            feedback=relcache.FEEDBACK,
         )
         if len(stages) == 1:  # classic single-stage surface (plain CapacityPlan)
             cap_plan = cap_plan.stages[0]
@@ -368,7 +359,7 @@ def _acquire_runner(
         )
         if cacheable:
             cache.put(key, runner, [rels[a] for a in base])
-    return runner, rels, cacheable
+    return runner, rels, cacheable, plan_tree
 
 
 def compiled_free_join(
@@ -415,8 +406,10 @@ def compiled_free_join(
     ExecOptions(chain_stages=False) restores the previous hybrid (non-root
     stages on the eager host engine) as a reference baseline. Returns the
     eager contract: a count for agg="count", else (bound, mult) over live
-    rows. `info`, if given, receives the runner, capacity plan, and retry
-    counters for inspection."""
+    rows. `info`, if given, receives the runner, capacity plan, retry
+    counters, and the chosen plan tree (`plan_tree`) for inspection —
+    compare plan_tree across calls to watch measured-cardinality feedback
+    re-plan a misestimated query."""
     opts = _resolve_options(
         options,
         dict(impl=impl, budget=budget, safety=safety,
@@ -427,7 +420,7 @@ def compiled_free_join(
     if unknown:
         raise ValueError(f"filter vars not in the query: {sorted(unknown)}")
     filter_vars = tuple(sorted(filters))
-    runner, rels, cacheable = _acquire_runner(
+    runner, rels, cacheable, chosen_tree = _acquire_runner(
         query, relations, plan_tree, agg=agg, options=opts, filter_vars=filter_vars
     )
     consts = (
@@ -444,6 +437,7 @@ def compiled_free_join(
             retries=runner.retries,
             compiles=runner.compiles,
             options=opts,
+            plan_tree=chosen_tree,
         )
     return out
 

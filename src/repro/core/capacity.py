@@ -275,6 +275,7 @@ def plan_capacities(
     compact_threshold: float = 0.25,
     max_capacity: int = 1 << 22,
     compact_output: bool = False,
+    feedback=None,
 ) -> CapacityPlan:
     """Derive a CapacityPlan for `plan` (see module doc).
 
@@ -291,14 +292,18 @@ def plan_capacities(
     compact_output: allow a compact point on the final node too — for
     non-root stages of a chained bushy plan, whose output buffer feeds the
     next stage's trie build (a squeezed buffer means a smaller lexsort),
-    there is always "more work" after the last probe."""
+    there is always "more work" after the last probe.
+    feedback: a relcache.CardFeedback — prefix estimates are replaced by
+    measured cardinalities from prior runs where recorded (see
+    optimizer.prefix_card), so a warm query's buffers are sized from
+    measurements instead of independence assumptions."""
     from repro.core.compiled import _static_schedule  # deferred: avoids a cycle
 
     if stats is None:
         stats = Stats(relations)
     if schedule is None:
         schedule = _static_schedule(plan)
-    estimates = estimate_prefixes(plan, stats=stats, schedule=schedule)
+    estimates = estimate_prefixes(plan, stats=stats, schedule=schedule, feedback=feedback)
     sizes = {
         a: float(max(1, stats.size(a)))
         for a in {sa.alias for node in plan.nodes for sa in node}
@@ -360,6 +365,7 @@ def plan_chain_capacities(
     block: int = OBLK,
     compact_threshold: float = 0.25,
     max_capacity: int = 1 << 22,
+    feedback=None,
 ) -> ChainCapacityPlan:
     """Capacity-plan a whole stage chain in one pass (no materialization).
 
@@ -385,6 +391,7 @@ def plan_chain_capacities(
                 compact_threshold=compact_threshold,
                 max_capacity=max_capacity,
                 compact_output=not root,
+                feedback=feedback,
             )
         )
         if not root:

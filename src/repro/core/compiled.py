@@ -1060,6 +1060,8 @@ class AdaptiveExecutor:
         self.reshapes = 0  # tightening re-runs across calls
         self.calls = 0  # top-level call chains issued (retries excluded)
         self._cache: dict[tuple, object] = {}
+        self._last_needs = None  # per-stage measured expansion needs (lane counts)
+        self._feedback_specs = None  # lazily-derived per-node prefix specs
         # base alias -> its level layout (for cross-call trie reuse); an
         # alias read under two different layouts falls back to raw columns
         base = _base_aliases(stages)
@@ -1186,11 +1188,96 @@ class AdaptiveExecutor:
                     continue
             # steady state: keep the grown/tightened plan
             self.cap_plan = chain.stages[0] if self._single else chain
+            # stash the measured per-node expansion needs: exact frontier
+            # lane counts, the optimizer's measured-cardinality feedback
+            self._last_needs = tuple(self._reduced(ne) for ne in out[-2])
             result = out[:-2]
             return result[0] if self.agg == "count" else result
         raise RuntimeError(
             f"frontier overflow persists after {self.max_retries} retries: {chain}"
         )
+
+    def _node_feedback_specs(self):
+        """Per stage, per executed node: the (alias, consumed-vars) multiset
+        whose joined cardinality that node's need_expand measures — or None
+        when the measurement is not a joined-prefix size. Two exclusions:
+        a cover that re-binds an already-bound variable (the executor
+        semijoins AFTER expanding, so the count is pre-equate), and a stage
+        alias whose consumed prefix is not the stage's full head (device-
+        only output, no base-relation equivalent). A fully-consumed stage
+        alias substitutes its own atoms' full specs, recursively, so every
+        recorded spec names only base relations."""
+        names = {n for n, _ in self.stages}
+        full_specs: dict[str, tuple | None] = {}
+        heads = {name: frozenset(p.query.head) for name, p in self.stages}
+        out = []
+        for (name, plan), sched in zip(self.stages, self.schedules):
+            aliases = {sa.alias for node in plan.nodes for sa in node}
+            prefix: dict[str, tuple[str, ...]] = {a: () for a in aliases}
+            bound: set[str] = set()
+            per_node = []
+            for _k, cover, probes in sched.entries:
+                rebinds = bool(set(cover.vars) & bound)
+                prefix[cover.alias] = prefix[cover.alias] + tuple(cover.vars)
+                bound |= set(cover.vars)
+                spec: list | None = None if rebinds else []
+                if spec is not None:
+                    for a, vs in prefix.items():
+                        if not vs:
+                            continue
+                        if a in names or a.startswith("__stage"):
+                            # "__stage" but not in names: the hybrid path's
+                            # per-call host materialization — never recorded
+                            sub = (
+                                full_specs.get(a)
+                                if frozenset(vs) == heads.get(a)
+                                else None
+                            )
+                            if sub is None:
+                                spec = None
+                                break
+                            spec.extend(sub)
+                        else:
+                            spec.append((a, frozenset(vs)))
+                per_node.append(tuple(spec) if spec else None)
+                for sa in probes:
+                    prefix[sa.alias] = prefix[sa.alias] + tuple(sa.vars)
+                    bound |= set(sa.vars)
+            out.append(tuple(per_node))
+            fs: list | None = []
+            for a in plan.query.atoms:
+                if a.alias in names or a.alias.startswith("__stage"):
+                    sub = full_specs.get(a.alias)
+                    if sub is None:
+                        fs = None
+                        break
+                    fs.extend(sub)
+                else:
+                    fs.append((a.alias, frozenset(a.vars)))
+            full_specs[name] = tuple(fs) if fs else None
+        return tuple(out)
+
+    def _record_feedback(self, relations) -> None:
+        """Persist the last call's measured expansion needs into the
+        process-wide measured-cardinality store (relcache.FEEDBACK). Only
+        meaningful measurements land: kill-mode filtered runs are skipped
+        by the caller (lane counts depend on the constants; mask-mode
+        batched runs keep the unfiltered layout and are safe), and nodes
+        with no recordable prefix spec or a zero need (the factorized-count
+        shortcut never expands) are skipped here."""
+        from repro.core import relcache
+
+        if self._last_needs is None:
+            return
+        if self._feedback_specs is None:
+            self._feedback_specs = self._node_feedback_specs()
+        for per_node, needs in zip(self._feedback_specs, self._last_needs):
+            for spec, n in zip(per_node, np.asarray(needs)):
+                if spec is None or int(n) <= 0:
+                    continue
+                relcache.FEEDBACK.record(
+                    [(relations[a], vs) for a, vs in spec], int(n)
+                )
 
     def run_relations(self, relations, *, reuse_tries: bool = True, filter_consts=None):
         """Convenience: host relations in, host results out — the warm
@@ -1201,7 +1288,12 @@ class AdaptiveExecutor:
         cache and rebuilds in-graph every call (the cold baseline the
         benchmarks time). A batched runner returns the per-lane results:
         a (B,) int64 count vector for agg="count", else a list of
-        (cols, mult) pairs, one per lane."""
+        (cols, mult) pairs, one per lane.
+
+        Successful runs feed the optimizer's measured-cardinality loop:
+        each node's exact frontier need is recorded against the relation
+        objects it joined (see _record_feedback), except kill-mode filtered
+        runs, whose lane counts depend on the selection constants."""
         data = {}
         for a in sorted(_base_aliases(self.stages)):
             rel = relations[a]
@@ -1214,6 +1306,8 @@ class AdaptiveExecutor:
             else:
                 data[a] = dev
         out = self(data, filter_consts)
+        if not self.filter_vars or self.batch is not None:
+            self._record_feedback(relations)
         if self.agg == "count":
             return np.asarray(out, np.int64) if self.batch else int(out)
         if self.batch:

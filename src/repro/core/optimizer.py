@@ -1,11 +1,44 @@
-"""A small cost-based optimizer producing binary join plans, plus the
-per-prefix cardinality estimates that drive the compiled path's capacity
-planner (core/capacity.py).
+"""Cost-based join-order optimization: enumerate -> cost -> feedback.
 
 The paper uses DuckDB's optimizer; DuckDB is not available in this
-container, so we implement the classic textbook estimator: greedy left-deep
-join ordering driven by cardinality estimates
-|L join R| = |L|*|R| / prod_{v shared} max(d_L(v), d_R(v)).
+container, so plan choice is ours. Three layers, each feeding the next:
+
+1. **Enumerate.** `JoinOrderOptimizer` runs dynamic programming over
+   connected sub-queries (DPsub-style: every connected subset of atoms,
+   every connected split of it, no cross products) and keeps the top-k
+   candidate *bushy* binary trees per subset, ranked by the classic C_out
+   cost with every per-subset cardinality capped by the AGM bound of that
+   subset — one bad estimate cannot blow up the ranking. The enumeration
+   pays at most `budget` (subset, split) pairs; past the budget — or at
+   `level=0` — it falls back to `optimize`, the original greedy left-deep
+   search driven by |L join R| = |L|*|R| / prod_{v shared} max(d_L, d_R).
+
+2. **Cost.** The surviving candidates (plus the greedy tree, which wins
+   ties for stability) are re-ranked by a *device* cost model
+   (`device_cost`): capacity.plan_chain_capacities sizes every frontier
+   buffer the compiled chain would allocate — estimates x safety, capped
+   per prefix by the AGM bound — and the cost is the total number of
+   frontier cells *touched*: one buffer-wide pass per expansion, per
+   probe (at the compacted width once the plan compacts), per compaction
+   scatter, plus the write + sort of every non-root stage's output
+   buffer. That is the quantity a TPU actually pays for; output row
+   counts alone would miss that a bushy stage trades frontier width for
+   a trie build.
+
+3. **Feedback.** The compiled executor reports every node's exact
+   frontier need; the adaptive runner records them in
+   relcache.FEEDBACK (a per-relation measured-cardinality store), and
+   both the DP's subset cardinalities and the capacity planner's prefix
+   estimates (`prefix_card`) consult it — so the next cold plan for these
+   relations is chosen against measured, not estimated, cardinalities.
+   Chosen plans are memoized per (query, relations): at the default
+   level 1 the first choice is *pinned* for the life of the relations
+   (one run measures only the chosen plan's own prefixes, so re-ranking
+   against unmeasured challengers is information-asymmetric and every
+   plan flip is a recompile); at level >= 2 a version bump of the store
+   triggers re-planning, and the incumbent is abandoned only when the
+   re-ranked best is decisively cheaper (`adopt_margin`) — it re-plans
+   exactly when the measurements contradict the estimates.
 
 `bad=True` reproduces the paper's Sec 5.4 hijack — every cardinality
 estimate is pinned to 1 — under which the greedy search degenerates to
@@ -20,6 +53,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core import relcache
 from repro.core.plan import BinaryPlan, FreeJoinPlan, linear
 from repro.relational.relation import Relation
 from repro.relational.schema import Atom, Query
@@ -76,6 +110,12 @@ class Stats:
                 self._distinct[key] = compute()
         return self._distinct[key]
 
+    def relation_of(self, alias: str) -> Relation | None:
+        """The live relation behind an alias, or None when the alias has no
+        host relation (measured-cardinality feedback keys on relation
+        identity, so only alias with a real object can use the store)."""
+        return self.relations.get(alias)
+
 
 class StageStats:
     """Statistics view that also answers for *planned* stage outputs —
@@ -103,6 +143,12 @@ class StageStats:
             e = self._stage[alias]
             return float(min(max(1.0, e.distinct.get(var, e.card)), max(1.0, e.card)))
         return self.base.distinct(alias, var)
+
+    def relation_of(self, alias: str) -> Relation | None:
+        # stage outputs live only on device — no identity to key feedback on
+        if alias in self._stage:
+            return None
+        return self.base.relation_of(alias)
 
 
 class FilteredStats:
@@ -137,6 +183,13 @@ class FilteredStats:
         if var in self.filtered.get(alias, frozenset()):
             return 1.0
         return float(min(self.base.distinct(alias, var), max(1, self.size(alias))))
+
+    def relation_of(self, alias: str) -> Relation | None:
+        # a filtered atom's frontier contribution depends on the constant;
+        # measured (unfiltered) cardinalities would oversize it
+        if alias in self.filtered:
+            return None
+        return self.base.relation_of(alias)
 
 
 def stage_est(atoms: list[Atom], stats) -> Est:
@@ -244,13 +297,35 @@ class NodeEstimate:
     probe_after: tuple[float, ...] = ()
 
 
-def prefix_card(prefix: dict[str, tuple[str, ...]], stats: Stats) -> float:
+def prefix_card(
+    prefix: dict[str, tuple[str, ...]], stats: Stats, feedback=None
+) -> float:
     """Estimated size of the join of each relation's consumed var-prefix.
 
     A depth-d trie level holds the distinct prefix combos, bounded by both
     the relation's row count and the product of per-var distinct counts
     (independence); the prefixes are then joined with the same max-distinct
-    rule as the binary estimator."""
+    rule as the binary estimator.
+
+    `feedback` (a relcache.CardFeedback) short-circuits the estimate with
+    the *measured* cardinality of this exact prefix multiset when a prior
+    run recorded one — but only when every participating alias resolves to
+    a live relation object (stats.relation_of), so stage outputs and
+    constant-filtered atoms keep their estimates."""
+    if feedback is not None:
+        specs: list | None = []
+        for alias, vars_ in prefix.items():
+            if not vars_:
+                continue
+            rel = stats.relation_of(alias) if hasattr(stats, "relation_of") else None
+            if rel is None:
+                specs = None
+                break
+            specs.append((rel, vars_))
+        if specs:
+            measured = feedback.lookup(specs)
+            if measured is not None:
+                return float(max(1.0, measured))
     cur: Est | None = None
     for alias, vars_ in prefix.items():
         if not vars_:
@@ -268,6 +343,7 @@ def estimate_prefixes(
     *,
     stats: Stats | None = None,
     schedule=None,
+    feedback=None,
 ) -> list[NodeEstimate]:
     """Walk the plan with the compiled path's static schedule (first-listed
     cover per node) and estimate the frontier size around every executed
@@ -275,7 +351,9 @@ def estimate_prefixes(
 
     `stats` and `schedule` let the driver share one Stats cache and one
     StaticSchedule across the whole planning pass; passing only `relations`
-    keeps the standalone surface working (stats built here)."""
+    keeps the standalone surface working (stats built here). `feedback`
+    replaces individual prefix estimates with measured cardinalities from
+    prior runs where available (see prefix_card)."""
     from repro.core.compiled import _static_schedule  # deferred: avoids a cycle
 
     if stats is None:
@@ -287,13 +365,302 @@ def estimate_prefixes(
     out: list[NodeEstimate] = []
     for k, cover, probes in schedule.entries:
         prefix[cover.alias] = prefix[cover.alias] + tuple(cover.vars)
-        expand = prefix_card(prefix, stats)
+        expand = prefix_card(prefix, stats, feedback)
         cards = []
         for sa in probes:
             prefix[sa.alias] = prefix[sa.alias] + tuple(sa.vars)
-            cards.append(min(prefix_card(prefix, stats), expand))
+            cards.append(min(prefix_card(prefix, stats, feedback), expand))
         after = cards[-1] if cards else expand
         out.append(
             NodeEstimate(node=k, expand=expand, after=after, probe_after=tuple(cards))
         )
     return out
+
+
+# ---------------------------------------------------------------------------
+# Cost-based plan enumeration: DP over connected subqueries + a device cost
+# model over planned frontier capacities (see module docstring, layers 1-2).
+# ---------------------------------------------------------------------------
+
+
+def _tree_sig(tree) -> tuple:
+    """Structural identity of a binary plan tree (BinaryPlan has no value
+    equality; plan choice needs one to detect 'same plan as last time')."""
+    if isinstance(tree, Atom):
+        return (tree.alias,)
+    return (_tree_sig(tree.left), _tree_sig(tree.right))
+
+
+def device_cost(
+    query: Query,
+    tree,
+    *,
+    stats,
+    safety: float = 2.0,
+    compact_threshold: float = 0.25,
+    feedback=None,
+) -> float:
+    """Device cost of one candidate plan tree, in frontier cells *touched*.
+
+    The tree is decomposed into its compiled stage chain and capacity-
+    planned exactly as execution would (capacity.plan_chain_capacities:
+    estimates x safety capped per prefix by the AGM bound, measured
+    cardinalities from `feedback` where available). The cost then charges
+    one buffer-wide pass per expansion, one per probe — at the compacted
+    width for probes after the plan's compact point — one per compaction
+    scatter, and write + sort passes for every non-root stage's output
+    buffer (the next stage's trie build scales with that static width).
+    This is what distinguishes a bushy split from a left-deep chain on
+    device: the bushy plan pays two small stage buffers and a trie build
+    instead of dragging one huge intermediate frontier through every
+    remaining probe."""
+    from repro.core.capacity import plan_chain_capacities  # deferred: cycle
+    from repro.core.plan import stage_plans
+
+    stages = stage_plans(query, tree)
+    chain = plan_chain_capacities(
+        stages,
+        stats=stats,
+        safety=safety,
+        compact_threshold=compact_threshold,
+        feedback=feedback,
+    )
+    total = 0.0
+    for si, cp in enumerate(chain.stages):
+        for (_k, _cover, probes), cap, ct, cpi in zip(
+            cp.schedule.entries, cp.capacities, cp.compact_to, cp.compact_probe
+        ):
+            total += cap  # the expansion writes the frontier once
+            width = cap
+            for j in range(len(probes)):
+                if ct is not None and j >= cpi:
+                    width = ct  # probes after the compact point run squeezed
+                total += width  # one gather pass over the frontier per probe
+            if ct is not None:
+                total += cap  # the compaction scatter itself
+        if si < len(chain.stages) - 1:
+            out_w = cp.compact_to[-1] if cp.compact_to[-1] is not None else cp.capacities[-1]
+            total += 2.0 * out_w  # stage output write + downstream trie sort
+    return total
+
+
+# chosen plans, memoized per (query structure, relation identities, knobs)
+# and revalidated against the feedback store's version: a steady-state
+# stream of identical queries re-enumerates nothing
+_CHOICE_CACHE = relcache.KeyedCache(max_entries=128)
+
+
+class JoinOrderOptimizer:
+    """Enumerate -> cost -> feedback plan choice (module docstring).
+
+    level 0 delegates to the greedy `optimize`; level >= 1 runs the DP
+    enumeration with the default budget and PINS the choice (measured
+    cardinalities sharpen later *cold* plans and capacity planning, but a
+    live (query, relations) pair keeps its first plan — no recompiles);
+    level >= 2 additionally enumerates with an effectively exhaustive
+    budget and RE-PLANS when new measurements arrive, guarded by
+    `adopt_margin` hysteresis. `budget` (max (subset, split) pairs
+    considered) overrides the level default; exhausting it falls back to
+    greedy. `keep` is the number of candidate trees retained per connected
+    subset AND the number of finalists re-ranked by device_cost.
+    `feedback` is a relcache.CardFeedback (usually relcache.FEEDBACK);
+    `adopt_margin` is the hysteresis: a re-ranking under new measurements
+    must beat the incumbent's device cost by this factor to displace it."""
+
+    def __init__(
+        self,
+        level: int = 1,
+        *,
+        budget: int | None = None,
+        keep: int = 3,
+        safety: float = 2.0,
+        compact_threshold: float = 0.25,
+        feedback=None,
+        adopt_margin: float = 0.8,
+    ):
+        self.level = int(level)
+        self.budget = int(
+            budget if budget is not None else (4096 if self.level <= 1 else 1 << 20)
+        )
+        self.keep = int(keep)
+        self.safety = float(safety)
+        self.compact_threshold = float(compact_threshold)
+        self.feedback = feedback
+        self.adopt_margin = float(adopt_margin)
+
+    # ---- public surface ----------------------------------------------
+    def choose(
+        self,
+        query: Query,
+        relations: dict[str, Relation],
+        *,
+        stats: Stats | None = None,
+        bad: bool = False,
+    ) -> BinaryPlan | Atom:
+        if stats is None:
+            stats = Stats(relations)
+        if bad or self.level <= 0 or len(query.atoms) < 3:
+            # greedy fallback: level 0, the Sec 5.4 hijack, and queries too
+            # small for the enumeration to beat the heuristic
+            return optimize(query, relations, bad, stats=stats)
+        key = self._choice_key(query, relations)
+        version = self.feedback.version if self.feedback is not None else 0
+        hit = _CHOICE_CACHE.get(key)
+        if hit is not None and (self.level < 2 or hit[1] == version):
+            # level < 2 PINS the first choice for the life of the relations:
+            # one run's measurements cover only the incumbent's own prefixes,
+            # so re-ranking against unmeasured challengers is information-
+            # asymmetric (the measured plan always looks worse than the
+            # fantasy ones) and would flip-flop plans — and every flip is a
+            # recompile. Level >= 2 opts into adaptive re-planning, guarded
+            # by adopt_margin hysteresis below.
+            return hit[0]
+        chosen = self._choose_uncached(query, relations, stats, incumbent=hit)
+        _CHOICE_CACHE.put(
+            key, (chosen, version), [relations[a.alias] for a in query.atoms]
+        )
+        return chosen
+
+    # ---- internals ----------------------------------------------------
+    def _choice_key(self, query: Query, relations) -> tuple:
+        return (
+            tuple((a.alias, a.name, tuple(a.vars)) for a in query.atoms),
+            tuple(query.head),
+            self.level,
+            self.budget,
+            self.keep,
+            round(self.safety, 6),
+            round(self.compact_threshold, 6),
+            tuple(sorted((a.alias, id(relations[a.alias])) for a in query.atoms)),
+        )
+
+    def _choose_uncached(self, query, relations, stats, *, incumbent):
+        fb = self.feedback
+        greedy = optimize(query, relations, stats=stats)
+        candidates = self._enumerate(query, stats)
+        # greedy first: exact device-cost ties keep the pre-enumeration plan
+        finalists, seen = [], set()
+        for t in [greedy] + (candidates or []):
+            sig = _tree_sig(t)
+            if sig in seen:
+                continue
+            seen.add(sig)
+            finalists.append((t, sig))
+        if len(finalists) == 1:
+            return finalists[0][0]
+        costed = [
+            (
+                device_cost(
+                    query,
+                    t,
+                    stats=stats,
+                    safety=self.safety,
+                    compact_threshold=self.compact_threshold,
+                    feedback=fb,
+                ),
+                i,
+                t,
+                sig,
+            )
+            for i, (t, sig) in enumerate(finalists)
+        ]
+        cost, _i, best, best_sig = min(costed)
+        if incumbent is not None:
+            prev = incumbent[0]
+            prev_sig = _tree_sig(prev)
+            if prev_sig != best_sig:
+                prev_cost = next(
+                    (c for c, _i, _t, s in costed if s == prev_sig),
+                    device_cost(
+                        query,
+                        prev,
+                        stats=stats,
+                        safety=self.safety,
+                        compact_threshold=self.compact_threshold,
+                        feedback=fb,
+                    ),
+                )
+                if cost > self.adopt_margin * prev_cost:
+                    # not decisively cheaper under the new measurements:
+                    # keep the incumbent (a running template never swaps
+                    # its compiled runner over estimation noise)
+                    return prev
+        return best
+
+    def _enumerate(self, query: Query, stats) -> list | None:
+        """Top-`keep` bushy trees for the full query by C_out cost with
+        AGM-capped (and measured, where known) subset cardinalities; None
+        when the budget runs out or the join graph is disconnected."""
+        from repro.core.capacity import agm_bound  # deferred: cycle
+
+        fb = self.feedback
+        atoms = list(query.atoms)
+        m = len(atoms)
+        vars_of = [frozenset(a.vars) for a in atoms]
+        sizes = {a.alias: float(max(1, stats.size(a.alias))) for a in atoms}
+        full = (1 << m) - 1
+        # best[mask] = up to `keep` of (cost, counter, tree, Est, varset)
+        best: dict[int, list] = {}
+        for i, a in enumerate(atoms):
+            best[1 << i] = [(0.0, i, a, base_est(a, stats), vars_of[i])]
+        tiebreak = m  # deterministic ordering for equal costs
+        pairs = 0
+        for mask in sorted(range(1, full + 1), key=lambda x: x.bit_count()):
+            if mask.bit_count() < 2:
+                continue
+            members = [i for i in range(m) if mask >> i & 1]
+            edges = {atoms[i].alias: tuple(atoms[i].vars) for i in members}
+            bound = agm_bound(edges, sizes)
+            measured = self._measured_card([atoms[i] for i in members], stats)
+            cands: list = []
+            sub = (mask - 1) & mask
+            while sub:
+                rest = mask ^ sub
+                left, right = best.get(sub), best.get(rest)
+                if left and right:
+                    pairs += 1
+                    if pairs > self.budget:
+                        return None
+                    cl, _tl, tl, el, vl = left[0]
+                    cr, _tr, tr, er, vr = right[0]
+                    if vl & vr:  # no cross products
+                        est = join_est(el, er)
+                        card = min(est.card, bound)
+                        if measured is not None:
+                            card = measured
+                        est = Est(
+                            card,
+                            {v: min(dv, card) for v, dv in est.distinct.items()},
+                            est.atoms,
+                        )
+                        tiebreak += 1
+                        cands.append(
+                            (cl + cr + card, tiebreak, BinaryPlan(tl, tr), est, vl | vr)
+                        )
+                sub = (sub - 1) & mask
+            if cands:
+                cands.sort(key=lambda c: (c[0], c[1]))
+                dedup, sigs = [], set()
+                for c in cands:
+                    s = _tree_sig(c[2])
+                    if s in sigs:
+                        continue
+                    sigs.add(s)
+                    dedup.append(c)
+                    if len(dedup) >= self.keep:
+                        break
+                best[mask] = dedup
+        if full not in best:
+            return None  # disconnected join graph: greedy handles it
+        return [t for _c, _i, t, _e, _v in best[full]]
+
+    def _measured_card(self, subset_atoms, stats) -> float | None:
+        if self.feedback is None:
+            return None
+        specs = []
+        for a in subset_atoms:
+            rel = stats.relation_of(a.alias) if hasattr(stats, "relation_of") else None
+            if rel is None:
+                return None
+            specs.append((rel, a.vars))
+        return self.feedback.lookup(specs)

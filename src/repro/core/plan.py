@@ -204,3 +204,40 @@ def var_order_from_fj(plan: FreeJoinPlan) -> list[str]:
             for v in sa.vars:
                 seen.setdefault(v)
     return list(seen)
+
+
+# ---------------------------------------------------------------------------
+# Stage derivation: a (possibly bushy) binary plan tree -> per-stage Free
+# Join plans, root last (Sec 2.2 decomposition + binary2fj + factor per
+# stage). Shared by the eager drivers, the compiled chain, and the
+# optimizer's device cost model.
+# ---------------------------------------------------------------------------
+
+
+def decompose_tree(plan_tree) -> list:
+    """Stages of a plan tree; a bare Atom (single-atom query) is its own
+    root stage."""
+    if isinstance(plan_tree, Atom):
+        return [("__root", [plan_tree])]
+    return plan_tree.decompose()
+
+
+def stage_plans(query: Query, plan_tree, *, factorize: bool = True):
+    """Per-stage Free Join plans of a (possibly bushy) binary plan tree:
+    [(name, fj_plan)], root last. Each stage's plan is built over its own
+    sub-query (fj.query), whose head is the stage's output schema; later
+    stages reference earlier ones by name as ordinary atoms."""
+    stage_schemas: dict[str, tuple[str, ...]] = {}
+    out = []
+    for name, leaves in decompose_tree(plan_tree):
+        atoms = [
+            leaf if isinstance(leaf, Atom) else Atom(leaf, stage_schemas[leaf])
+            for leaf in leaves
+        ]
+        sub_q = Query(atoms)
+        fj = binary2fj(atoms, sub_q)
+        if factorize:
+            fj = factor(fj)
+        stage_schemas[name] = sub_q.head
+        out.append((name, fj))
+    return out

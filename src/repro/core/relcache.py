@@ -150,5 +150,68 @@ class ScopedCache:
         return self._parent.misses
 
 
+class CardFeedback:
+    """Measured-cardinality store: the optimizer's feedback loop.
+
+    The compiled executor reports, for every executed node, the *exact*
+    number of frontier lanes its expansion produced — which, for a node
+    whose cover binds only fresh variables, is precisely the size of the
+    join of the per-relation consumed prefixes (distinct-combination
+    semantics, the same currency optimizer.prefix_card estimates). The
+    adaptive runner records those measurements here after each successful
+    unfiltered (or mask-mode batched) run; plan enumeration and capacity
+    planning then consult the store, so a warm template re-optimizes and
+    re-sizes against measured, not estimated, cardinalities.
+
+    Keys are multisets of (relation identity, consumed-var set) pairs —
+    one per atom of the measured sub-join — so a measurement taken under
+    one plan transfers to any other plan (or any other query) joining the
+    same prefixes of the same relation objects. Entries ride a KeyedCache,
+    so they are LRU-bounded and die with their relations (weakref
+    finalizers); id() reuse can never resurrect a stale measurement.
+
+    `version` increments only when a recording *changes* the store
+    materially (a new key, or a value drifting past `rtol`). Plan choice
+    caches key on it: a steady-state stream of identical runs re-records
+    identical measurements, never bumps the version, and therefore never
+    re-enumerates."""
+
+    def __init__(self, max_entries: int = 2048, rtol: float = 1.25):
+        self._cache = KeyedCache(max_entries=max_entries)
+        self.rtol = rtol
+        self.version = 0
+        self.records = 0  # record() calls that changed the store
+
+    @staticmethod
+    def key(specs) -> tuple:
+        """specs: iterable of (rel, vars) pairs. The multiset is order-
+        insensitive but duplicate-preserving (self-joins keep both legs)."""
+        return tuple(sorted((id(r), tuple(sorted(vs))) for r, vs in specs))
+
+    def record(self, specs, card: float) -> None:
+        specs = list(specs)
+        key = self.key(specs)
+        card = float(max(1.0, card))
+        old = self._cache.get(key)
+        if old is not None and max(old, card) <= self.rtol * min(old, card):
+            return  # within tolerance: keep the store (and the version) still
+        self._cache.put(key, card, [r for r, _ in specs])
+        self.records += 1
+        self.version += 1
+
+    def lookup(self, specs) -> float | None:
+        return self._cache.get(self.key(specs))
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def clear(self) -> None:
+        self._cache.clear()
+        self.version += 1
+
+
 # the process-wide registry every compiled-path cache hangs off
 REGISTRY = RelationRegistry()
+
+# the process-wide measured-cardinality store (see CardFeedback)
+FEEDBACK = CardFeedback()

@@ -4,11 +4,16 @@ A multi-tenant engine's worst failure mode is not a slow query — it is a
 query whose frontier buffers blow past their planned capacities, because
 recovery (grow + recompile + re-run) stalls every co-batched request
 behind one tenant's pathology. Admission control converts that stall into
-a bounded, attributable rejection, at three layers:
+a bounded, attributable rejection, at four layers:
 
 1. **pre-compile** (`max_plan_cells`): the capacity planner's total
    buffer-cell count is known before the executor ever compiles, so an
    oversized template is rejected with zero XLA work.
+1b. **measured cost** (`max_dispatch_us`): the engine keeps a per-template
+   EMA of measured dispatch wall time; a template that has *demonstrated*
+   it costs more than the tenant's budget is rejected up front, even when
+   its planned footprint looked innocent (planned cells can't see probe
+   rounds, retry storms, or host overheads — the measurement can).
 2. **runtime growth quota** (`max_node_capacity`): the adaptive runner
    refuses to grow any single node past this bound, raising
    `core.capacity.CapacityQuotaError` naming the offending batch lane —
@@ -43,11 +48,18 @@ class QueryQuota:
     (sum of per-node capacities across all stages) — checked before the
     first compile. max_node_capacity: ceiling any single frontier buffer
     may grow to at runtime (armed inside the adaptive runner). max_retries:
-    quota-eviction rounds allowed per batched dispatch."""
+    quota-eviction rounds allowed per batched dispatch.
+    max_dispatch_us: ceiling on the template's *measured* dispatch time
+    (the engine's per-template EMA, microseconds) — planned cells say what
+    a query should cost, the EMA says what it actually costs, and a
+    template whose measured cost blew past the quota is rejected before
+    joining another batch. A template's first-ever dispatch has no EMA and
+    is admitted on the planned-cost checks alone."""
 
     max_plan_cells: int | None = None
     max_node_capacity: int | None = None
     max_retries: int = 3
+    max_dispatch_us: float | None = None
 
 
 class AdmissionController:
@@ -82,6 +94,25 @@ class AdmissionController:
                 reason="plan_cells",
             )
         self.admitted += 1
+
+    def check_cost(self, tenant: str, measured_us: float | None) -> None:
+        """Measured-cost admission: reject when the template's measured
+        dispatch-time EMA exceeds the tenant's quota. Called BEFORE
+        check_plan (a cost rejection must not count as admitted);
+        measured_us=None (template never dispatched) always passes."""
+        q = self.quota(tenant)
+        if (
+            q.max_dispatch_us is not None
+            and measured_us is not None
+            and measured_us > q.max_dispatch_us
+        ):
+            self.rejected += 1
+            raise AdmissionError(
+                f"measured dispatch cost {measured_us:.0f}us exceeds tenant "
+                f"{tenant!r} quota of {q.max_dispatch_us:.0f}us",
+                tenant=tenant,
+                reason="measured_cost",
+            )
 
     def reject_runtime(self, tenant: str) -> None:
         """Count a runtime (growth-quota) eviction. The raise site is the

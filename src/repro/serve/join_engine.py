@@ -8,14 +8,19 @@ groups, dispatches, and retires.
 
 The pipeline per `step()`:
 
-1. **Group by template.** Every submitted request was canonicalized on
-   arrival (templates.canonicalize): alpha-renamed aliases, constants
-   lifted out. Requests sharing a template key — however differently
-   their tenants spelled the query — are batchable against ONE compiled
-   runner.
+1. **Pick a template, round-robin.** Every submitted request was
+   canonicalized on arrival (templates.canonicalize): alpha-renamed
+   aliases, constants lifted out. Requests sharing a template key —
+   however differently their tenants spelled the query — are batchable
+   against ONE compiled runner. Each step serves the *next* queued
+   template in rotation (not the head-of-line one): a tenant streaming
+   requests on one template can fill the queue front forever, and
+   first-template-wins would starve every other template behind it.
 2. **Admit.** The runner's capacity plan is known before any compile;
-   each request is checked against its tenant's `max_plan_cells` quota
-   and rejected with zero XLA work on violation.
+   each request is checked against its tenant's measured-cost quota
+   (`max_dispatch_us` vs the template's dispatch-time EMA — see below)
+   and its `max_plan_cells` quota, and rejected with zero XLA work on
+   violation.
 3. **Dispatch one vmapped probe.** Up to `slots` co-template requests run
    as one batched executor call over the shared cached tries: the int32
    constants matrix (slots, F) is the only per-lane input. Dead slots
@@ -29,10 +34,17 @@ The pipeline per `step()`:
 Filterless templates (F=0) have nothing to vary per lane, so the whole
 group is served by ONE unbatched call whose result every member shares —
 degenerate batching, and the cheapest possible kind.
+
+The engine also keeps a per-template exponential moving average of
+measured dispatch wall time (`cost_ema_us`, updated on every dispatch —
+cold compiles included, decayed by later warm dispatches). Admission
+consults it alongside the planned cells: planning says what a template
+*should* cost, the EMA says what it *did* cost last time(s).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import numpy as np
@@ -84,8 +96,15 @@ class JoinServeEngine:
         self._cache = (cache if cache is not None else api._runner_cache).scoped("join-templates")
         self.queue: deque[JoinRequest] = deque()
         self._next_rid = 0
+        self._rr = 0  # round-robin cursor over queued templates
         self.dispatches = 0  # batched executor calls issued
         self.served = 0  # requests completed successfully
+        # template key -> EMA of measured dispatch wall time (us). Bounded
+        # in practice by the runner cache's LRU (dead templates stop being
+        # re-submitted); alpha 0.3 forgets a cold compile in a few warm
+        # dispatches.
+        self.cost_ema_us: dict = {}
+        self.ema_alpha = 0.3
 
     # ---- intake -------------------------------------------------------
     def submit(
@@ -110,23 +129,34 @@ class JoinServeEngine:
 
     # ---- serving loop -------------------------------------------------
     def step(self) -> list[JoinRequest]:
-        """One engine iteration: take the head-of-line request's template,
-        pull every queued co-template request into up to `slots` lanes, and
-        serve them with one dispatch. Returns the requests retired this
-        step (completed or rejected)."""
+        """One engine iteration: pick the next queued template in round-robin
+        rotation, pull every queued co-template request into up to `slots`
+        lanes, and serve them with one dispatch. Returns the requests retired
+        this step (completed or rejected).
+
+        Rotation, not head-of-line: with first-template-wins, a tenant
+        streaming requests on one template keeps the queue front occupied
+        and every other template waits forever. The rotation cursor walks
+        the arrival-ordered list of *distinct* queued templates, so k live
+        templates each get every k-th dispatch regardless of queue depth."""
         if not self.queue:
             return []
-        head = self.queue[0]
+        templates: list[PlanTemplate] = []
+        for r in self.queue:
+            if r.template not in templates:
+                templates.append(r.template)
+        chosen = templates[self._rr % len(templates)]
+        self._rr += 1
         group: list[JoinRequest] = []
         rest: deque[JoinRequest] = deque()
         while self.queue:
             r = self.queue.popleft()
-            if r.template == head.template and len(group) < self.slots:
+            if r.template == chosen and len(group) < self.slots:
                 group.append(r)
             else:
                 rest.append(r)
         self.queue = rest
-        self._serve_group(head.template, group)
+        self._serve_group(chosen, group)
         return group
 
     def run(self, max_steps: int = 10_000) -> list[JoinRequest]:
@@ -143,10 +173,16 @@ class JoinServeEngine:
         req.error = err
         req.done = True
 
+    def _observe_cost(self, key, dt_us: float) -> None:
+        ema = self.cost_ema_us.get(key)
+        self.cost_ema_us[key] = (
+            dt_us if ema is None else (1 - self.ema_alpha) * ema + self.ema_alpha * dt_us
+        )
+
     def _serve_group(self, template: PlanTemplate, group: list[JoinRequest]) -> None:
         t = template
         batch = self.slots if t.filter_vars else None
-        runner, rels, _ = _acquire_runner(
+        runner, rels, _, _ = _acquire_runner(
             t.query,
             t.relations,
             t.plan_tree,
@@ -157,12 +193,16 @@ class JoinServeEngine:
             max_capacity=self._group_capacity_quota(group),
             cache=self._cache,
         )
-        # pre-compile admission: the capacity plan exists, the executor
-        # does not yet — a cells violation costs zero XLA work
+        # pre-compile admission: measured cost first (a cost rejection must
+        # not count as admitted), then the planned-cells check — the
+        # capacity plan exists, the executor does not yet, so either
+        # violation costs zero XLA work
         live: list[JoinRequest] = []
         cells = runner.cap_plan.cells()
+        ema = self.cost_ema_us.get(t.key)
         for req in group:
             try:
+                self.admission.check_cost(req.tenant, ema)
                 self.admission.check_plan(req.tenant, cells)
             except AdmissionError as e:
                 self._reject(req, e)
@@ -172,7 +212,9 @@ class JoinServeEngine:
             return
         if not t.filter_vars:
             # nothing varies per lane: one unbatched call answers everyone
+            t0 = time.perf_counter()
             out = runner.run_relations(rels, reuse_tries=True)
+            self._observe_cost(t.key, (time.perf_counter() - t0) * 1e6)
             self.dispatches += 1
             for req in live:
                 req.result, req.done = out, True
@@ -183,9 +225,11 @@ class JoinServeEngine:
             consts = np.broadcast_to(live[0].consts, (self.slots, len(t.filter_vars))).copy()
             for i, req in enumerate(live):
                 consts[i] = req.consts  # dead slots keep lane 0's constants
+            t0 = time.perf_counter()
             try:
                 out = runner.run_relations(rels, reuse_tries=True, filter_consts=consts)
             except CapacityQuotaError as e:
+                self._observe_cost(t.key, (time.perf_counter() - t0) * 1e6)
                 self.dispatches += 1
                 victim = live[e.lane] if e.lane is not None and e.lane < len(live) else live[0]
                 self.admission.reject_runtime(victim.tenant)
@@ -194,6 +238,7 @@ class JoinServeEngine:
                 if not live:
                     return
                 continue
+            self._observe_cost(t.key, (time.perf_counter() - t0) * 1e6)
             self.dispatches += 1
             for i, req in enumerate(live):
                 req.result = int(out[i]) if t.agg == "count" else out[i]

@@ -275,11 +275,16 @@ def test_estimates_track_truth_within_order_of_magnitude(rng):
 
 
 def test_planning_pass_host_work(rng, monkeypatch):
-    """The driver computes one Stats cache and one StaticSchedule per query:
-    exactly one np.unique per referenced column (6 for the triangle) and one
-    _static_schedule call across optimize -> plan_capacities ->
-    estimate_prefixes -> make_executor."""
+    """Greedy planning (optimize_level=0) computes one Stats cache and one
+    StaticSchedule per query: exactly one np.unique per referenced column (6
+    for the triangle) and one _static_schedule call across optimize ->
+    plan_capacities -> estimate_prefixes -> make_executor. The enumerating
+    default additionally schedules each device-costed finalist on the COLD
+    call (bounded by the optimizer's `keep`), reuses the same Stats cache
+    (zero extra np.unique), and a warm repeat — pinned choice, cached runner
+    — does zero planning host work of either kind."""
     import repro.core.compiled as compiled_mod
+    from repro.core import ExecOptions
 
     q = triangle_query()
     rels = {a.alias: rand_rel(rng, a.alias, a.vars, 40, 8) for a in q.atoms}
@@ -295,9 +300,20 @@ def test_planning_pass_host_work(rng, monkeypatch):
         "_static_schedule",
         lambda p: (sched.__setitem__(0, sched[0] + 1), orig_sched(p))[1],
     )
-    assert compiled_free_join(q, rels, agg="count") == want
+    greedy = ExecOptions(optimize_level=0)
+    assert compiled_free_join(q, rels, agg="count", options=greedy) == want
     assert uniq[0] == 6, f"one np.unique per column, got {uniq[0]}"
     assert sched[0] == 1, f"one schedule computation per query, got {sched[0]}"
+
+    # cold enumerating call: per-finalist costing, same Stats cache
+    assert compiled_free_join(q, rels, agg="count") == want
+    cold_uniq, cold_sched = uniq[0], sched[0]
+    assert cold_uniq == 6, f"Stats cache shared across levels, got {cold_uniq}"
+    assert cold_sched <= 1 + 2 * 3 + 2, f"finalist costing unbounded: {cold_sched}"
+
+    # warm repeat: choice pinned, runner cached — zero host planning
+    assert compiled_free_join(q, rels, agg="count") == want
+    assert (uniq[0], sched[0]) == (cold_uniq, cold_sched), "warm call re-planned"
 
 
 def test_capacity_plan_carries_schedule(rng):

@@ -1,0 +1,195 @@
+"""Cost-based bushy plan enumeration and the measured-cardinality loop.
+
+Three contracts: (1) plan choice never changes answers — greedy (level 0)
+and exhaustive enumeration (level 2) agree with the eager engine on counts
+and on full result sets, across acyclic and cyclic shapes; (2) the DP
+finds bushy plans a greedy left-deep search cannot express when the
+estimates already justify them; (3) the feedback loop re-plans a warm
+query whose first run revealed a misestimated intermediate, and then
+holds the new plan steady (no flip-flop)."""
+import numpy as np
+
+from repro.core import relcache
+from repro.core.api import ExecOptions, compiled_free_join, free_join, to_sorted_tuples
+from repro.core.optimizer import JoinOrderOptimizer, Stats, _tree_sig, optimize
+from repro.core.plan import BinaryPlan
+from repro.relational.relation import Relation
+from repro.relational.schema import Atom, Query, triangle_query
+from tests.conftest import rand_rel
+
+# ---- query shapes: acyclic (chain, star) and cyclic (triangle, 4-cycle) --
+
+SHAPES = {
+    "chain4": Query(
+        [
+            Atom("R0", ("a", "b")),
+            Atom("R1", ("b", "c")),
+            Atom("R2", ("c", "d")),
+            Atom("R3", ("d", "e")),
+        ]
+    ),
+    "star3": Query(
+        [Atom("S0", ("h", "a")), Atom("S1", ("h", "b")), Atom("S2", ("h", "c"))]
+    ),
+    "triangle": triangle_query(),
+    "cycle4": Query(
+        [
+            Atom("A", ("x", "y")),
+            Atom("B", ("y", "z")),
+            Atom("C", ("z", "w")),
+            Atom("D", ("w", "x")),
+        ]
+    ),
+}
+
+
+def _instance(q, rng):
+    sizes = rng.integers(5, 40, len(q.atoms))
+    doms = rng.integers(2, 7, len(q.atoms))
+    return {
+        a.alias: rand_rel(rng, a.alias, a.vars, int(n), int(d))
+        for a, n, d in zip(q.atoms, sizes, doms)
+    }
+
+
+def test_enumerated_plans_match_greedy_and_eager(rng):
+    """Property-style sweep: for every shape, level-0 (greedy) and level-2
+    (exhaustive DP) compiled counts equal the eager oracle, and the level-2
+    full result set is tuple-for-tuple the eager one."""
+    for name, q in SHAPES.items():
+        rels = _instance(q, rng)
+        want = free_join(q, rels, agg="count")
+        got0 = compiled_free_join(q, rels, agg="count", options=ExecOptions(optimize_level=0))
+        got2 = compiled_free_join(q, rels, agg="count", options=ExecOptions(optimize_level=2))
+        assert got0 == want, f"{name}: greedy plan changed the count"
+        assert got2 == want, f"{name}: enumerated plan changed the count"
+        full = compiled_free_join(q, rels, agg=None, options=ExecOptions(optimize_level=2))
+        assert to_sorted_tuples(full, q.head) == to_sorted_tuples(
+            free_join(q, rels), q.head
+        ), f"{name}: enumerated plan changed the result set"
+
+
+def test_budget_exhaustion_falls_back_to_greedy(rng):
+    """An enumeration budget too small to finish the DP degrades to the
+    greedy tree instead of an arbitrary partial winner."""
+    q = SHAPES["chain4"]
+    rels = _instance(q, rng)
+    stats = Stats(rels)
+    greedy = optimize(q, rels, stats=stats)
+    starved = JoinOrderOptimizer(level=1, budget=1).choose(q, rels, stats=stats)
+    assert _tree_sig(starved) == _tree_sig(greedy)
+
+
+def test_enumerator_picks_bushy_on_selective_ends(rng):
+    """Chain with selective end joins and a dense middle join: the greedy
+    left-deep search must drag the dense intermediate through every later
+    stage, while the DP can bracket it — (A⋈B)⋈(C⋈D) — and the device
+    cost model prefers that. Counts agree regardless."""
+    n = 400
+    rels = {
+        "A": Relation("A", {"a": rng.integers(0, 50, n), "b": rng.integers(0, 200, n)}),
+        "B": Relation("B", {"b": rng.integers(0, 200, n), "c": rng.integers(0, 4, n)}),
+        "C": Relation("C", {"c": rng.integers(0, 4, n), "d": rng.integers(0, 200, n)}),
+        "D": Relation("D", {"d": rng.integers(0, 200, n), "e": rng.integers(0, 50, n)}),
+    }
+    q = Query(
+        [Atom("A", ("a", "b")), Atom("B", ("b", "c")), Atom("C", ("c", "d")), Atom("D", ("d", "e"))]
+    )
+    stats = Stats(rels)
+    greedy = optimize(q, rels, stats=stats)
+    chosen = JoinOrderOptimizer(level=2).choose(q, rels, stats=stats)
+    assert _tree_sig(chosen) != _tree_sig(greedy)
+    assert isinstance(chosen, BinaryPlan)
+    assert isinstance(chosen.left, BinaryPlan) and isinstance(chosen.right, BinaryPlan), (
+        f"expected a bushy bracketing, got {chosen}"
+    )
+    want = free_join(q, rels, agg="count")
+    assert compiled_free_join(q, rels, agg="count", options=ExecOptions(optimize_level=0)) == want
+    assert compiled_free_join(q, rels, agg="count", options=ExecOptions(optimize_level=2)) == want
+
+
+def _skewed_triangle(rng, n=200):
+    """x and z are uniform (honest estimates, and deliberately asymmetric —
+    d_x=20 vs d_z=10 — so exactly one alternative first join is cheapest);
+    y has ~40 distinct values but 80% of its mass on one, so the
+    per-variable distinct-count estimator prices R⋈S as the *cheapest*
+    first join when it is by far the worst."""
+
+    def skewed(n):
+        v = rng.integers(0, 1000, n)
+        v[rng.random(n) < 0.8] = 0
+        return v
+
+    rels = {
+        "R": Relation("R", {"x": rng.integers(0, 20, n), "y": skewed(n)}),
+        "S": Relation("S", {"y": skewed(n), "z": rng.integers(0, 10, n)}),
+        "T": Relation("T", {"z": rng.integers(0, 10, n), "x": rng.integers(0, 20, n)}),
+    }
+    return triangle_query(), rels
+
+
+def test_replan_after_misestimated_first_run(rng):
+    """The acceptance bar for the feedback loop: a correlated-skew triangle
+    whose estimates pick R⋈S first; the first run measures the real
+    intermediate (~30x the estimate) and records it in relcache.FEEDBACK;
+    the second call at optimize_level=2 re-plans away from it; the third
+    call keeps the new plan (measurements now agree with costs — no
+    flip-flop)."""
+    relcache.FEEDBACK.clear()
+    q, rels = _skewed_triangle(rng)
+    opts = ExecOptions(optimize_level=2)
+    want = free_join(q, rels, agg="count")
+
+    info1 = {}
+    assert compiled_free_join(q, rels, agg="count", options=opts, info=info1) == want
+    assert len(relcache.FEEDBACK) > 0, "the run must record measured cardinalities"
+    plan1 = _tree_sig(info1["plan_tree"])
+
+    info2 = {}
+    assert compiled_free_join(q, rels, agg="count", options=opts, info=info2) == want
+    plan2 = _tree_sig(info2["plan_tree"])
+    assert plan2 != plan1, "measured cardinalities must displace the misestimated plan"
+
+    info3 = {}
+    assert compiled_free_join(q, rels, agg="count", options=opts, info=info3) == want
+    assert _tree_sig(info3["plan_tree"]) == plan2, "the adopted plan must be stable"
+
+
+def test_default_level_pins_first_choice(rng):
+    """At the default optimize_level=1 the same misestimated triangle keeps
+    its first plan (and therefore its compiled runner) on warm calls: plan
+    pinning is what makes serving's one-compile contract safe."""
+    relcache.FEEDBACK.clear()
+    q, rels = _skewed_triangle(rng)
+    opts = ExecOptions(optimize_level=1)
+    info1, info2 = {}, {}
+    c1 = compiled_free_join(q, rels, agg="count", options=opts, info=info1)
+    c2 = compiled_free_join(q, rels, agg="count", options=opts, info=info2)
+    assert c1 == c2
+    assert _tree_sig(info1["plan_tree"]) == _tree_sig(info2["plan_tree"])
+    assert info2["runner"] is info1["runner"]
+
+
+def test_cardfeedback_rtol_and_lifetime():
+    """Unit contract of the store: re-recording within rtol is a no-op (no
+    version churn -> no spurious re-planning); a material change bumps the
+    version; entries die with their relations."""
+    fb = relcache.CardFeedback(rtol=1.25)
+    r = Relation("R", {"x": np.arange(4)})
+    s = Relation("S", {"x": np.arange(4)})
+    specs = [(r, ("x",)), (s, ("x",))]
+    fb.record(specs, 100.0)
+    v0 = fb.version
+    assert fb.lookup(specs) == 100.0
+    fb.record(specs, 110.0)  # within rtol: ignored
+    assert fb.version == v0 and fb.lookup(specs) == 100.0
+    fb.record(specs, 400.0)  # material: replaces and bumps
+    assert fb.version > v0 and fb.lookup(specs) == 400.0
+    # order of the spec list is canonicalized away
+    assert fb.lookup([(s, ("x",)), (r, ("x",))]) == 400.0
+    assert len(fb) == 1
+    del specs, s
+    import gc
+
+    gc.collect()
+    assert len(fb) == 0, "entries must die with their relations"

@@ -213,6 +213,77 @@ def test_admission_counters_and_quota_resolution():
     assert adm.admitted == 2 and adm.rejected == 1
 
 
+# ---- fairness: round-robin over templates --------------------------------
+
+
+def test_round_robin_prevents_template_starvation(rng):
+    """A tenant streaming requests on one template must not starve another
+    template queued behind it: the rotation guarantees template B is served
+    by the second step even though six of A's requests arrived first (and
+    keep arriving)."""
+    q, rels = _triangle(rng)
+    eng = JoinServeEngine(slots=2)
+    qa, ra = _respell(q, rels, "a")
+    qb, rb = _respell(q, rels, "b")
+    a_reqs = [eng.submit(qa, ra, {"x": i}, tenant="a") for i in range(6)]
+    r_b = eng.submit(qb, rb, {"y": 1}, tenant="b")
+    eng.step()  # rotation position 0: template A (first arrival)
+    assert not r_b.done and sum(r.done for r in a_reqs) == 2
+    eng.submit(qa, ra, {"x": 6}, tenant="a")  # A keeps streaming
+    eng.step()  # rotation position 1: template B, despite A's backlog
+    assert r_b.done
+    assert r_b.result == free_join(q, rels, agg="count", filters={"y": 1})
+    eng.run()
+    assert all(r.done for r in a_reqs)
+
+
+# ---- measured-cost admission ---------------------------------------------
+
+
+def test_measured_cost_admission(rng):
+    """max_dispatch_us admits a template's first-ever dispatch (no EMA yet),
+    then rejects the tenant once the measured EMA exceeds the quota —
+    pre-dispatch, sparing co-batched tenants, with zero new XLA work."""
+    q, rels = _triangle(rng)
+    adm = AdmissionController(
+        per_tenant={"cheap": QueryQuota(max_dispatch_us=0.001)}
+    )
+    kc = KeyedCache()
+    eng = JoinServeEngine(slots=4, admission=adm, cache=kc)
+    qa, ra = _respell(q, rels, "a")
+    r0 = eng.submit(qa, ra, {"x": 1}, tenant="cheap")
+    eng.run()
+    # first dispatch: no measurement exists, so the impossible quota passes
+    assert r0.error is None
+    assert r0.result == free_join(q, rels, agg="count", filters={"x": 1})
+    (t_key,) = eng.cost_ema_us  # ...and the dispatch recorded an EMA
+    assert eng.cost_ema_us[t_key] > 0
+    (runner,) = _cached_runners(kc)
+    compiles0, dispatches0 = runner.compiles, eng.dispatches
+    admitted0 = adm.admitted
+    # warm template: the EMA now trips the quota before any dispatch, and a
+    # co-batched unbounded tenant is still served
+    r1 = eng.submit(qa, ra, {"x": 2}, tenant="cheap")
+    r2 = eng.submit(qa, ra, {"x": 3}, tenant="vip")
+    eng.run()
+    assert isinstance(r1.error, AdmissionError) and r1.error.reason == "measured_cost"
+    assert runner.compiles == compiles0
+    assert r2.result == free_join(q, rels, agg="count", filters={"x": 3})
+    assert eng.dispatches == dispatches0 + 1
+    # a cost rejection is counted as rejected, never as admitted
+    assert adm.rejected == 1 and adm.admitted == admitted0 + 1
+
+
+def test_check_cost_unit():
+    adm = AdmissionController(per_tenant={"t": QueryQuota(max_dispatch_us=50.0)})
+    adm.check_cost("t", None)  # no measurement: passes, counts nothing
+    adm.check_cost("t", 50.0)  # at the bound: passes
+    with pytest.raises(AdmissionError) as ei:
+        adm.check_cost("t", 50.1)
+    assert ei.value.tenant == "t" and ei.value.reason == "measured_cost"
+    assert adm.admitted == 0 and adm.rejected == 1
+
+
 # ---- the redesigned options surface ------------------------------------
 
 
