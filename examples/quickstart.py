@@ -161,6 +161,15 @@ def main():
         )
         print(f"level {level}     : count={c}  plan={info['plan_tree']}")
 
+    # static verification: ExecOptions(verify=True) runs the plan/schedule/
+    # capacity linter (repro.analysis) over the freshly planned chain before
+    # anything compiles — structural defects (unbound probe vars, missing
+    # covers, capacities past the AGM cap, broken stage wiring) surface as
+    # typed diagnostics with plan-path locations instead of shape errors
+    # deep inside jit. The lint runs once per build, never on warm hits.
+    c = compiled_free_join(qb, relsd, agg="count", options=ExecOptions(verify=True))
+    print(f"verified    : count={c}  (ExecOptions(verify=True) linted the plan pre-compile)")
+
     # multi-tenant serving loop: concurrent tenants send the SAME query in
     # different spellings (their own aliases) with their own selection
     # constants. JoinServeEngine canonicalizes each request into a plan

@@ -1,0 +1,53 @@
+"""Static analysis over Free Join plans and their compiled programs.
+
+Two passes (see planlint.py and jaxpr_audit.py for the invariant
+stories), one diagnostic currency (diagnostics.py), one corpus of real
+planner output to keep the rules honest (corpus.py), and a CLI gate
+(``python -m repro.analysis``) that CI runs over the corpus.
+
+Entry points re-exported here are the package's public surface; the
+rule catalogue and severity contract are documented in README.md.
+"""
+from repro.analysis.diagnostics import (
+    Diagnostic,
+    PlanVerificationError,
+    Report,
+    Severity,
+)
+from repro.analysis.jaxpr_audit import (
+    audit_jaxpr,
+    audit_runner,
+    iter_bodies,
+    iter_eqns,
+    trace_runner,
+)
+from repro.analysis.planlint import (
+    lint_capacities,
+    lint_chain,
+    lint_plan,
+    lint_query,
+    lint_schedule,
+    lint_stage_dag,
+    lint_template,
+    lint_tree,
+)
+
+__all__ = [
+    "Diagnostic",
+    "PlanVerificationError",
+    "Report",
+    "Severity",
+    "audit_jaxpr",
+    "audit_runner",
+    "iter_bodies",
+    "iter_eqns",
+    "trace_runner",
+    "lint_capacities",
+    "lint_chain",
+    "lint_plan",
+    "lint_query",
+    "lint_schedule",
+    "lint_stage_dag",
+    "lint_template",
+    "lint_tree",
+]

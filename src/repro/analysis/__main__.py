@@ -1,0 +1,93 @@
+"""CI gate: lint + audit every corpus case through the production stack.
+
+For each corpus case this builds the runner via the same acquisition
+path compiled_free_join uses, runs it once (so the audited program is
+the steady-state one, after any overflow growth), then:
+
+* planlint over the stage chain + capacity plan (+ template idempotence
+  for filtered cases),
+* jaxpr audit over the compiled chain executor as the warm path traces it.
+
+Any ERROR-severity diagnostic fails the process (exit 1). Warnings and
+info are printed but do not fail — the severity contract of README.md.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis [--seed N] [-v]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.corpus import build_runner, corpus_cases
+from repro.analysis.diagnostics import Report, Severity
+from repro.analysis.jaxpr_audit import audit_runner
+from repro.analysis.planlint import lint_chain, lint_template
+
+
+def check_case(case, *, verbose: bool = False) -> Report:
+    runner, rels = build_runner(case)
+    rep = Report()
+    # lint FIRST, on fresh planner output: the capacity-vs-AGM check is a
+    # planner-regression check, and overflow growth (below) legitimately
+    # raises capacities past the planned AGM record when measured needs do
+    chain = runner._as_chain(runner.cap_plan)
+    rep.extend(
+        lint_chain(
+            runner.stages,
+            chain,
+            filter_vars=runner.filter_vars,
+            batch=runner.batch,
+        )
+    )
+    # then run once: overflow growth settles, so the audited jaxpr is the
+    # executor a warm serving stream would actually dispatch
+    runner.run_relations(rels, filter_consts=case.filter_consts)
+    if case.filters:
+        from repro.serve.templates import canonicalize
+
+        template, _consts = canonicalize(
+            case.query, case.relations, case.filters, options=case.options
+        )
+        rep.extend(lint_template(template))
+    rep.extend(audit_runner(runner, rels, name=f"{case.name}.jaxpr"))
+    if verbose:
+        print(f"  runner: {len(runner.stages)} stage(s), "
+              f"{runner.compiles} compile(s), {runner.retries} retr(ies)")
+    return rep
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static plan verifier + jaxpr auditor over the corpus",
+    )
+    ap.add_argument("--seed", type=int, default=0, help="corpus data seed")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    ns = ap.parse_args(argv)
+
+    failed = 0
+    for case in corpus_cases(seed=ns.seed):
+        rep = check_case(case, verbose=ns.verbose)
+        errors = rep.errors()
+        worst = "clean"
+        if errors:
+            worst = "ERROR"
+        elif rep.warnings():
+            worst = "warning"
+        print(f"[{case.name}] {worst}: {len(rep.diagnostics)} diagnostic(s)")
+        for d in rep:
+            if d.severity >= Severity.ERROR or ns.verbose:
+                print(f"  {d}")
+        if errors:
+            failed += 1
+    if failed:
+        print(f"\n{failed} corpus case(s) with error-severity findings")
+        return 1
+    print("\nanalysis gate: all corpus cases clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

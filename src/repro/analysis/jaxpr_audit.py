@@ -1,0 +1,255 @@
+"""jaxpr audit — static checks over the *compiled program*, not the plan.
+
+planlint proves the plan is right; it says nothing about what the plan
+compiled INTO. Three regression classes live only at the jaxpr layer and
+have each bitten this codebase or its ancestors:
+
+* **device-host sync points** — a callback primitive (io_callback,
+  pure_callback, debug_callback) inside the probe program serializes the
+  device against the host once per dispatch. Fine in a debug harness,
+  fatal in the batched serving path where one dispatch carries B tenants.
+* **kernel-shape regressions** — the probe loop must lower to a
+  `while`/`scan` primitive. The PR 2 bug class: a Python-level loop over
+  probe rounds traced into a 32x-unrolled gather chain that type-checked,
+  produced correct counts, and ran an order of magnitude slow. No test
+  that checks *results* can catch it; counting loop primitives in the
+  jaxpr can.
+* **recompile/bake hazards** — a relation-sized buffer captured as a
+  jaxpr *const* (instead of an argument) is baked into the compiled
+  executable: every new dataset recompiles, and the executable bloats by
+  the buffer. Scalars baked as consts are usually deliberate (capacities
+  are static by design and live in the executor cache key) — those are
+  reported at INFO severity as an inventory, not a finding.
+
+`audit_jaxpr` walks a ClosedJaxpr (recursively, through pjit/while/scan
+sub-jaxprs); `audit_runner` traces an AdaptiveExecutor's cached chain
+executor exactly as the warm path would call it and audits the result.
+Findings are typed diagnostics (see diagnostics.py) with jaxpr-path
+locators like ``jaxpr.eqn[12].pjit.eqn[3]``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.diagnostics import Report
+
+# Primitives that round-trip to the host mid-program. infeed/outfeed are
+# legacy but cheap to keep on the list.
+CALLBACK_PRIMITIVES = frozenset(
+    {
+        "io_callback",
+        "pure_callback",
+        "debug_callback",
+        "callback",
+        "infeed",
+        "outfeed",
+    }
+)
+
+# Primitives that prove the probe loop stayed a loop.
+LOOP_PRIMITIVES = frozenset({"while", "scan", "fori_loop"})
+
+# Gather-family primitives: the probe path's footprint in a jaxpr body.
+GATHER_PRIMITIVES = frozenset({"gather", "dynamic_slice", "take"})
+
+# More gathers than this in ONE jaxpr body (not summed over sub-jaxprs)
+# means probe rounds were unrolled into straight-line code: a rolled
+# probe step touches each trie level a constant number of times PER
+# SCHEDULE OP, so the legitimate per-body count scales with the plan's
+# op count (measured ~10-11 on the corpus), while an unrolled probe loop
+# multiplies it by the round budget (32x in the PR 2 regression).
+# audit_runner sizes the threshold from the runner's schedules
+# (GATHERS_PER_OP * ops + slack); this constant is the flat default for
+# bare audit_jaxpr calls on single-stage programs.
+GATHER_UNROLL_THRESHOLD = 24
+GATHERS_PER_OP = 16
+
+# A const bigger than this many elements is a baked buffer, not a baked
+# scalar. Capacity-sized scratch (iotas, pad masks) is legitimate and
+# bounded by the largest planned capacity; relation-sized buffers are
+# not. audit_runner raises the threshold to clear the planned capacities
+# when they are larger.
+CONST_ELEMS_THRESHOLD = 32768
+
+
+def _sub_jaxprs(params: dict):
+    """Yield (param_name, jaxpr) for every sub-jaxpr in an eqn's params —
+    duck-typed so pjit (ClosedJaxpr), while (open Jaxpr pair), scan, and
+    custom primitives all walk the same way."""
+    for name, v in params.items():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for item in vs:
+            inner = getattr(item, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                yield name, inner  # ClosedJaxpr -> its Jaxpr
+            elif hasattr(item, "eqns"):
+                yield name, item  # bare Jaxpr
+
+
+def iter_bodies(jaxpr, path: str = "jaxpr"):
+    """Yield (path, jaxpr) for the given jaxpr and every sub-jaxpr,
+    depth-first. Accepts a ClosedJaxpr or a Jaxpr."""
+    inner = getattr(jaxpr, "jaxpr", None)
+    if inner is not None and hasattr(inner, "eqns"):
+        jaxpr = inner
+    yield path, jaxpr
+    for i, eqn in enumerate(jaxpr.eqns):
+        for pname, sub in _sub_jaxprs(eqn.params):
+            prim = eqn.primitive.name
+            sub_path = f"{path}.eqn[{i}].{prim}"
+            if pname not in ("jaxpr", "call_jaxpr"):
+                sub_path += f".{pname}"
+            yield from iter_bodies(sub, sub_path)
+
+
+def iter_eqns(jaxpr, path: str = "jaxpr"):
+    """Yield (path, eqn) over every equation of every body."""
+    for body_path, body in iter_bodies(jaxpr, path):
+        for i, eqn in enumerate(body.eqns):
+            yield f"{body_path}.eqn[{i}]", eqn
+
+
+def audit_jaxpr(
+    closed_jaxpr,
+    *,
+    expect_loop: bool = True,
+    const_elems: int = CONST_ELEMS_THRESHOLD,
+    gather_threshold: int = GATHER_UNROLL_THRESHOLD,
+    name: str = "jaxpr",
+) -> Report:
+    """Audit one traced program. `expect_loop=True` asserts the probe loop
+    survived lowering (set False for programs with nothing to probe, or
+    for pallas impls whose loop lives inside the kernel). `const_elems` is
+    the baked-buffer size cutoff in elements."""
+    rep = Report()
+    loop_count = 0
+    per_body_gathers: list[tuple[str, int]] = []
+    for body_path, body in iter_bodies(closed_jaxpr, name):
+        gathers = 0
+        for i, eqn in enumerate(body.eqns):
+            prim = eqn.primitive.name
+            if prim in CALLBACK_PRIMITIVES:
+                rep.error(
+                    "host-callback",
+                    f"{body_path}.eqn[{i}]",
+                    f"{prim} inside the compiled program: a device-host sync "
+                    "point on every dispatch (move host work outside the "
+                    "executor, or behind an explicit debug flag)",
+                )
+            if prim in LOOP_PRIMITIVES:
+                loop_count += 1
+            if prim in GATHER_PRIMITIVES:
+                gathers += 1
+        per_body_gathers.append((body_path, gathers))
+        if gathers > gather_threshold:
+            rep.error(
+                "probe-loop-unrolled",
+                body_path,
+                f"{gathers} gather-family ops in one jaxpr body (threshold "
+                f"{gather_threshold}): probe rounds appear unrolled into a "
+                "straight-line gather chain instead of a while/scan loop "
+                "(the PR 2 regression class)",
+            )
+    if expect_loop and loop_count == 0:
+        rep.error(
+            "probe-loop-missing",
+            name,
+            "no while/scan primitive anywhere in the program, but the plan "
+            "has probed levels: the probe loop did not survive lowering",
+        )
+    consts = getattr(closed_jaxpr, "consts", ())
+    n_scalar = 0
+    for i, c in enumerate(consts):
+        size = int(np.size(c))
+        if size <= 1:
+            n_scalar += 1
+        elif size > const_elems:
+            rep.error(
+                "captured-buffer-const",
+                f"{name}.const[{i}]",
+                f"const #{i} has {size} elements (dtype "
+                f"{getattr(c, 'dtype', type(c).__name__)}): a baked buffer — "
+                "data this large must be an argument, or every new dataset "
+                "recompiles the executor",
+            )
+    if n_scalar:
+        rep.info(
+            "baked-scalar-consts",
+            f"{name}.consts",
+            f"{n_scalar} scalar const(s) baked into the program (static "
+            "capacities/budgets — deliberate; they key the executor cache)",
+        )
+    return rep
+
+
+def _has_probes(runner) -> bool:
+    return any(
+        probes for sched in runner.schedules for _k, _c, probes in sched.entries
+    )
+
+
+def _schedule_ops(runner) -> int:
+    """Total schedule ops across the chain: one per executed node (the
+    cover expansion) plus one per probe — the unit the legitimate
+    per-body gather count scales with."""
+    return sum(
+        1 + len(probes)
+        for sched in runner.schedules
+        for _k, _c, probes in sched.entries
+    )
+
+
+def trace_runner(runner, relations):
+    """Trace a runner's compiled chain executor exactly as the warm path
+    invokes it (registry device columns + cached base tries + zero filter
+    constants) and return the ClosedJaxpr."""
+    from repro.core.compiled import TRIE_CACHE, _base_aliases, device_columns
+
+    data = {}
+    for a in sorted(_base_aliases(runner.stages)):
+        rel = relations[a]
+        dev = device_columns(rel)
+        lo = runner._alias_lops.get(a)
+        data[a] = (
+            TRIE_CACHE.get(rel, dev, lo, impl=runner.impl, budget=runner.budget)
+            if lo is not None
+            else dev
+        )
+    chain = runner._as_chain(runner.cap_plan)
+    fn = runner._fn(chain)
+    if runner.filter_vars:
+        shape = (
+            (runner.batch, len(runner.filter_vars))
+            if runner.batch
+            else (len(runner.filter_vars),)
+        )
+        consts = jnp.zeros(shape, jnp.int32)
+        return jax.make_jaxpr(fn)(data, consts)
+    return jax.make_jaxpr(fn)(data)
+
+
+def audit_runner(runner, relations, *, name: str = "runner") -> Report:
+    """Audit an AdaptiveExecutor's compiled program against its real
+    inputs. The baked-buffer threshold clears the runner's own planned
+    capacities (capacity-sized scratch is legitimate; relation-sized
+    consts are the hazard) and the loop expectation is scoped to the jnp
+    impl — pallas kernels carry their loop inside pallas_call."""
+    chain = runner._as_chain(runner.cap_plan)
+    max_cap = max(
+        (c for cp in chain.stages for c in cp.capacities), default=1
+    )
+    const_elems = max(CONST_ELEMS_THRESHOLD, 4 * int(max_cap))
+    expect_loop = runner.impl == "jnp" and _has_probes(runner)
+    gather_threshold = max(
+        GATHER_UNROLL_THRESHOLD, GATHERS_PER_OP * _schedule_ops(runner)
+    )
+    jaxpr = trace_runner(runner, relations)
+    return audit_jaxpr(
+        jaxpr,
+        expect_loop=expect_loop,
+        const_elems=const_elems,
+        gather_threshold=gather_threshold,
+        name=name,
+    )

@@ -41,31 +41,25 @@ class ArchSpec:
             return self.long_context_ok
         return shape in SHAPES
 
+    def _input_struct(self, batch: int, seq: int) -> jax.ShapeDtypeStruct:
+        if self.modality == "text":
+            return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        # stub (non-text) frontend: precomputed patch/frame embeddings
+        return jax.ShapeDtypeStruct((batch, seq, self.model.d_model), jnp.bfloat16)
+
     def input_specs(self, shape: str) -> dict[str, jax.ShapeDtypeStruct]:
         """ShapeDtypeStruct stand-ins for every model input of `shape`
         (weak-type-correct, shardable, no device allocation)."""
         seq, batch, kind = SHAPES[shape]
-        cfg = self.model
         if kind == "train":
-            if self.modality == "text":
-                inp = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
-            else:  # stub frontend: precomputed patch/frame embeddings
-                inp = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
             return {
-                "inputs": inp,
+                "inputs": self._input_struct(batch, seq),
                 "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
             }
         if kind == "prefill":
-            if self.modality == "text":
-                inp = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
-            else:
-                inp = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
-            return {"inputs": inp}
+            return {"inputs": self._input_struct(batch, seq)}
         # decode: one new token against a KV cache of length seq
-        if self.modality == "text":
-            inp = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
-        else:
-            inp = jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.bfloat16)
+        inp = self._input_struct(batch, 1)
         return {
             "inputs": inp,
             "cur_len": jax.ShapeDtypeStruct((), jnp.int32),

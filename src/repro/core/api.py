@@ -59,7 +59,13 @@ class ExecOptions:
     them with the device cost model under the standard budget, and pins
     the winner for the life of the relations, 2 raises the enumeration
     budget to exhaustive and re-plans when measured cardinalities
-    contradict the estimates (see optimizer.JoinOrderOptimizer)."""
+    contradict the estimates (see optimizer.JoinOrderOptimizer);
+    verify: run the static plan verifier (repro.analysis.planlint) over
+    the derived stage chain and capacity plan BEFORE compiling — raises
+    analysis.PlanVerificationError listing every violated invariant
+    instead of failing opaquely inside a jit trace. Off by default (the
+    planner's own output is verified in CI); turn it on when feeding
+    hand-built plans or debugging a planner change."""
 
     impl: str = "jnp"
     budget: int = 32
@@ -68,6 +74,7 @@ class ExecOptions:
     jit: bool = True
     chain_stages: bool = True
     optimize_level: int = 1
+    verify: bool = False
 
 
 # one release of backwards compatibility: compiled_free_join's old loose
@@ -138,7 +145,7 @@ def _trie_modes(fj: FreeJoinPlan, fj_mode: str) -> dict[str, str]:
     if fj_mode != "binary":
         return {a: fj_mode for a in parts}
     probed = set()
-    for k, node in enumerate(fj.nodes):
+    for node in fj.nodes:
         for sa in node[1:]:
             if sa.vars:
                 probed.add(sa.alias)
@@ -342,6 +349,15 @@ def _acquire_runner(
             compact_threshold=options.compact_threshold,
             feedback=relcache.FEEDBACK,
         )
+        if options.verify:
+            # full pre-compile verification: plan structure, schedules,
+            # capacities, stage DAG, filter coverage — findings raised as
+            # one PlanVerificationError instead of a crash mid-trace
+            from repro.analysis.planlint import lint_chain
+
+            lint_chain(
+                stages, cap_plan, filter_vars=filter_vars, batch=batch
+            ).raise_errors()
         if len(stages) == 1:  # classic single-stage surface (plain CapacityPlan)
             cap_plan = cap_plan.stages[0]
         plan_arg = stages[0][1] if len(stages) == 1 else tuple(stages)
@@ -489,8 +505,9 @@ def generic_join(
                     order.append(v)
         var_order = [v for v in order if v in query.variables]
     plan = gj_plan(query, var_order)
-    out = engine.execute(plan, relations, mode="simple", dynamic_cover=True, agg=agg, stats=stats)
-    return out
+    return engine.execute(
+        plan, relations, mode="simple", dynamic_cover=True, agg=agg, stats=stats
+    )
 
 
 def to_sorted_tuples(result, head) -> list:

@@ -98,8 +98,7 @@ class Colt:
         """Sec 4.4: # keys if forced, else the vector length as an estimate."""
         if depth < self.forced_depth:
             return self.levels[depth].num_keys
-        n = self.rel.num_rows if self.leaf_rows is None else len(self.leaf_rows)
-        return n
+        return self.rel.num_rows if self.leaf_rows is None else len(self.leaf_rows)
 
     def iter_cost(self, depth: int, gids: np.ndarray) -> int:
         """Exact number of rows `iter_expand(depth, gids)` would produce —

@@ -209,7 +209,7 @@ class StaticTrie:
         if self.trivial:  # pure cover: iterate the base table, zero build
             return
         all_vars = [v for lv in lops.levels for v in lv]
-        if key_bits is not None and not self.empty and mult is None:
+        if key_bits is not None and not self.empty and mult is None:  # noqa: SIM108
             order = ops.segmented_sort(
                 [self.cols[v] for v in all_vars],
                 tuple(key_bits),
@@ -365,10 +365,11 @@ class StaticTrie:
         if self.trivial:
             return z, jnp.full(gids.shape, self.n, jnp.int32)
         if last:
-            if d > 0:
-                base = self.kpos[d][jnp.clip(gids, 0, self.n - 1)]
-            else:
-                base = jnp.zeros(gids.shape, jnp.int32)
+            base = (
+                self.kpos[d][jnp.clip(gids, 0, self.n - 1)]
+                if d > 0
+                else jnp.zeros(gids.shape, jnp.int32)
+            )
             counts = self._phys_rows(d, gids)
             return base, counts
         return self.child_base[d][gids], self.child_counts[d][gids]
@@ -1018,10 +1019,11 @@ class AdaptiveExecutor:
     ):
         from repro.core.capacity import ChainCapacityPlan  # deferred: no cycle
 
-        if isinstance(plan, FreeJoinPlan):
-            stages = (("__root", plan),)
-        else:
-            stages = tuple((name, p) for name, p in plan)
+        stages = (
+            (("__root", plan),)
+            if isinstance(plan, FreeJoinPlan)
+            else tuple((name, p) for name, p in plan)
+        )
         chain = (
             cap_plan
             if isinstance(cap_plan, ChainCapacityPlan)
@@ -1141,7 +1143,14 @@ class AdaptiveExecutor:
 
         if self.filter_vars:
             assert filter_consts is not None, "this runner's template has filters"
-            filter_consts = jnp.asarray(filter_consts, jnp.int32)
+            # explicit h2d (device_put), not jnp.asarray: the warm serving
+            # step must hold under jax.transfer_guard("disallow") — every
+            # remaining transfer in this driver is deliberate and visible
+            filter_consts = (
+                filter_consts.astype(jnp.int32)
+                if isinstance(filter_consts, jax.Array)
+                else jax.device_put(np.asarray(filter_consts, np.int32))
+            )
             want = (self.batch, len(self.filter_vars)) if self.batch else (
                 len(self.filter_vars),
             )
@@ -1152,8 +1161,12 @@ class AdaptiveExecutor:
         for _ in range(self.max_retries + 1):
             fn = self._fn(chain)
             out = fn(rel_data, filter_consts) if self.filter_vars else fn(rel_data)
+            # ONE explicit d2h for the control plane: the per-stage need
+            # vectors drive host-side overflow/tighten decisions. Results
+            # stay on device until the caller reads them.
+            needs_e, needs_c = jax.device_get((out[-2], out[-1]))
             grown = chain
-            for s, (cp, ne_l, nc_l) in enumerate(zip(chain.stages, out[-2], out[-1])):
+            for s, (cp, ne_l, nc_l) in enumerate(zip(chain.stages, needs_e, needs_c)):
                 ne, nc = self._reduced(ne_l), self._reduced(nc_l)
                 oe, oc = overflows(cp, ne, nc)
                 for i in np.flatnonzero(oc):
@@ -1172,7 +1185,7 @@ class AdaptiveExecutor:
                 # for planning estimates (the planner only has to be right
                 # on average; the measurement is exact)
                 shrunk = chain
-                for s, (ne, nc) in enumerate(zip(out[-2], out[-1])):
+                for s, (ne, nc) in enumerate(zip(needs_e, needs_c)):
                     ne, nc = self._reduced(ne), self._reduced(nc)
                     for i in range(len(ne)):
                         cp = shrunk.stages[s]
@@ -1190,7 +1203,7 @@ class AdaptiveExecutor:
             self.cap_plan = chain.stages[0] if self._single else chain
             # stash the measured per-node expansion needs: exact frontier
             # lane counts, the optimizer's measured-cardinality feedback
-            self._last_needs = tuple(self._reduced(ne) for ne in out[-2])
+            self._last_needs = tuple(self._reduced(ne) for ne in needs_e)
             result = out[:-2]
             return result[0] if self.agg == "count" else result
         raise RuntimeError(
@@ -1299,17 +1312,19 @@ class AdaptiveExecutor:
             rel = relations[a]
             dev = device_columns(rel)
             lo = self._alias_lops.get(a)
-            if reuse_tries and lo is not None:
-                data[a] = TRIE_CACHE.get(
-                    rel, dev, lo, impl=self.impl, budget=self.budget
-                )
-            else:
-                data[a] = dev
+            data[a] = (
+                TRIE_CACHE.get(rel, dev, lo, impl=self.impl, budget=self.budget)
+                if reuse_tries and lo is not None
+                else dev
+            )
         out = self(data, filter_consts)
         if not self.filter_vars or self.batch is not None:
             self._record_feedback(relations)
         if self.agg == "count":
-            return np.asarray(out, np.int64) if self.batch else int(out)
+            # explicit d2h: the count read-back is the warm path's only
+            # result transfer (see the transfer-guard regression test)
+            host = jax.device_get(out)
+            return np.asarray(host, np.int64) if self.batch else int(host)
         if self.batch:
             bound, valid, mult = out
             return [
@@ -1325,6 +1340,7 @@ def materialize_compiled(bound, valid, mult):
     """Strip padding lanes from an agg=None result: returns (cols, mult) as
     host numpy arrays over live rows only (the eager engine's contract —
     expand duplicate multiplicities with engine.materialize)."""
+    bound, valid, mult = jax.device_get((bound, valid, mult))
     v = np.asarray(valid)
     cols = {name: np.asarray(a)[v].astype(np.int64) for name, a in bound.items()}
     return cols, np.asarray(mult)[v].astype(np.int64)

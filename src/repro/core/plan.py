@@ -56,24 +56,36 @@ class FreeJoinPlan:
         return out
 
     # ---- validity (Def 3.5 + Def 3.7) ---------------------------------
-    def validate(self) -> None:
-        # partitioning
+    def violations(self):
+        """Yield every validity violation as (rule, locus, message) without
+        raising: rule is a stable identifier ("plan-not-partitioning" |
+        "node-repeats-relation" | "node-missing-cover"), locus the atom
+        alias or node index it anchors to. `validate` raises on the first;
+        the static verifier (repro.analysis.planlint) reports them all."""
         for atom in self.query.atoms:
             got = [
                 v for node in self.nodes for sa in node if sa.alias == atom.alias for v in sa.vars
             ]
             if sorted(got) != sorted(atom.vars) or len(set(got)) != len(got):
-                raise ValueError(
-                    f"plan does not partition atom {atom}: got {got} for vars {atom.vars}"
+                yield (
+                    "plan-not-partitioning",
+                    atom.alias,
+                    f"plan does not partition atom {atom}: got {got} for vars {atom.vars}",
                 )
         for k, node in enumerate(self.nodes):
             aliases = [sa.alias for sa in node]
             if len(set(aliases)) != len(aliases):
-                raise ValueError(f"node {k} repeats a relation: {node}")
+                yield ("node-repeats-relation", k, f"node {k} repeats a relation: {node}")
             if not self.covers(k):
-                raise ValueError(
-                    f"node {k} has no cover: new vars {self.vs(k) - self.avs(k)}"
+                yield (
+                    "node-missing-cover",
+                    k,
+                    f"node {k} has no cover: new vars {self.vs(k) - self.avs(k)}",
                 )
+
+    def validate(self) -> None:
+        for _rule, _locus, message in self.violations():
+            raise ValueError(message)
 
     def is_valid(self) -> bool:
         try:

@@ -125,18 +125,14 @@ def attn_decode(p, cfg: AttnConfig, x, cache_k, cache_v, cur_len):
     t = cache_k.shape[1]
     cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
     q, k, v = _qkv(p, cfg, x, cur[:, None])  # RoPE at absolute positions
-    if cfg.sliding_window is not None:
-        slot = cur % t
-    else:
-        slot = jnp.minimum(cur, t - 1)
+    slot = cur % t if cfg.sliding_window is not None else jnp.minimum(cur, t - 1)
     bi = jnp.arange(b)
     cache_k = cache_k.at[bi, slot].set(k[:, 0].astype(cache_k.dtype))
     cache_v = cache_v.at[bi, slot].set(v[:, 0].astype(cache_v.dtype))
     j = jnp.arange(t)[None, :]
+    valid = j <= slot[:, None]
     if cfg.sliding_window is not None:
-        valid = (j <= slot[:, None]) | (cur[:, None] >= t)  # full rotating buffer
-    else:
-        valid = j <= slot[:, None]
+        valid = valid | (cur[:, None] >= t)  # full rotating buffer
     mask = valid[:, None, :]
     out = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), mask, cfg)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), cache_k, cache_v

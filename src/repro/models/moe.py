@@ -132,8 +132,7 @@ def moe_apply(p, cfg: MoEConfig, x: jnp.ndarray):
         flat_e, pos, keep, tok, w = m
         gathered = outg[jnp.where(keep, flat_e, 0), jnp.where(keep, pos, 0)]
         gathered = jnp.where(keep[:, None], gathered, 0)
-        y = jnp.zeros((s, d), x.dtype).at[tok].add(gathered * w[:, None].astype(x.dtype))
-        return y
+        return jnp.zeros((s, d), x.dtype).at[tok].add(gathered * w[:, None].astype(x.dtype))
 
     y = jax.vmap(combine_one)(out, meta)
     y = layers.constrain(y, "moe_y")

@@ -174,10 +174,11 @@ def apply_model(params, cfg: ModelConfig, inputs, positions=None, last_only: boo
     """inputs: int32 token ids (B, S) or float embeddings (B, S, D).
     Returns fp32 logits (B, S, vocab)."""
     cdt = cfg.cdtype()
-    if jnp.issubdtype(inputs.dtype, jnp.integer):
-        x = layers.embed_apply(params["embed"], inputs, cdt)
-    else:
-        x = inputs.astype(cdt)
+    x = (
+        layers.embed_apply(params["embed"], inputs, cdt)
+        if jnp.issubdtype(inputs.dtype, jnp.integer)
+        else inputs.astype(cdt)
+    )
     b, s = x.shape[:2]
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -245,10 +246,11 @@ def decode_step(params, cfg: ModelConfig, token, cache, cur_len):
     """token (B, 1) int32 or embedding (B, 1, D); cur_len () int32.
     Returns (logits (B, 1, vocab), new_cache)."""
     cdt = cfg.cdtype()
-    if jnp.issubdtype(token.dtype, jnp.integer):
-        x = layers.embed_apply(params["embed"], token, cdt)
-    else:
-        x = token.astype(cdt)
+    x = (
+        layers.embed_apply(params["embed"], token, cdt)
+        if jnp.issubdtype(token.dtype, jnp.integer)
+        else token.astype(cdt)
+    )
 
     def unit_step(x, scanned):
         x = layers.constrain(x, "act_dec")

@@ -35,10 +35,11 @@ def join_oracle(query: Query, relations: dict[str, Relation]) -> set | list:
             [list(t) for t in zip(*(rel.columns[v] for v in atom.vars))] if rel.num_rows else []
         )
         r_rows = [[int(x) for x in t] for t in r_rows]
-        if vars_ is None:
-            vars_, rows = list(atom.vars), r_rows
-        else:
-            vars_, rows = _nat_join(vars_, rows, list(atom.vars), r_rows)
+        vars_, rows = (
+            (list(atom.vars), r_rows)
+            if vars_ is None
+            else _nat_join(vars_, rows, list(atom.vars), r_rows)
+        )
     idx = [vars_.index(v) for v in query.head]
     return sorted(tuple(r[i] for i in idx) for r in rows)
 

@@ -62,7 +62,7 @@ class DecodeServeEngine:
         """Prefill by teacher-forcing the prompt through decode steps for
         the single slot (simple and exact; a production path would use the
         full-sequence forward + cache scatter)."""
-        for t, tok in enumerate(req.prompt):
+        for tok in req.prompt:
             self._next_tok[slot, 0] = tok
             cur = jnp.asarray(self.cur_len)
             logits, self.cache = self._decode(

@@ -62,7 +62,7 @@ from repro.serve.templates import PlanTemplate, canonicalize
 class JoinRequest:
     rid: int
     tenant: str
-    template: PlanTemplate
+    template: PlanTemplate | None  # None: rejected at submit-time verification
     consts: np.ndarray  # (F,) int32 — the lifted selection constants
     result: object = None
     error: Exception | None = None
@@ -117,11 +117,38 @@ class JoinServeEngine:
         agg: str | None = "count",
         plan_tree=None,
     ) -> JoinRequest:
-        """Canonicalize and enqueue one query; returns its JoinRequest
-        handle (result/error/done are filled by step())."""
-        template, consts = canonicalize(
-            query, relations, filters, plan_tree=plan_tree, agg=agg, options=self.options
-        )
+        """Canonicalize, statically verify, and enqueue one query; returns
+        its JoinRequest handle (result/error/done are filled by step()).
+
+        Verification failures REJECT the request (error set, done=True,
+        admission counter bumped) instead of raising or enqueuing: a raise
+        would crash the submitting tenant's whole intake loop, and an
+        enqueued invalid plan would detonate mid-dispatch inside a batch
+        shared with innocent co-template tenants. A rejected handle comes
+        back immediately and never touches the serving loop."""
+        from repro.analysis.diagnostics import PlanVerificationError
+        from repro.analysis.planlint import lint_query, lint_template, lint_tree
+
+        # the ORIGINAL query, pre-canonicalization: canonicalize silently
+        # drops head vars no atom binds, so the template would look clean
+        rep = lint_query(query)
+        rep.extend(lint_tree(query, plan_tree)[0])
+        try:
+            rep.raise_errors()
+            template, consts = canonicalize(
+                query, relations, filters, plan_tree=plan_tree, agg=agg,
+                options=self.options,
+            )
+            lint_template(template).raise_errors()
+        except (PlanVerificationError, ValueError) as e:
+            req = JoinRequest(
+                rid=self._next_rid, tenant=tenant,
+                template=None, consts=np.zeros(0, np.int32),  # type: ignore[arg-type]
+            )
+            self._next_rid += 1
+            self.admission.reject_runtime(tenant)
+            self._reject(req, e)
+            return req
         req = JoinRequest(rid=self._next_rid, tenant=tenant, template=template, consts=consts)
         self._next_rid += 1
         self.queue.append(req)

@@ -54,8 +54,7 @@ class PagedAllocator:
         if self._dirty or self._table is None:
             self._rebuild()
         idx = self._table.probe([np.asarray(seq_ids, np.int64), np.asarray(page_nos, np.int64)])
-        out = np.where(idx >= 0, self._vals[np.clip(idx, 0, None)], -1)
-        return out
+        return np.where(idx >= 0, self._vals[np.clip(idx, 0, None)], -1)
 
     def page_index(self, seq_ids: list[int], max_pages: int) -> np.ndarray:
         """Dense (B, max_pages) slot matrix for the device (-1 = unused)."""

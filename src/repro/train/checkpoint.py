@@ -43,10 +43,8 @@ def save(ckpt_dir: str, step: int, tree) -> str:
     # numpy can't serialize bf16/fp8 (ml_dtypes): store them as raw views
     packed = {}
     for k, a in arrays.items():
-        if a.dtype.kind not in "fiub?" or a.dtype.name.startswith("bfloat"):
-            packed[k] = a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
-        else:
-            packed[k] = a
+        raw = a.dtype.kind not in "fiub?" or a.dtype.name.startswith("bfloat")
+        packed[k] = a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8) if raw else a
     np.savez(os.path.join(tmp, "leaves.npz"), **packed)
     manifest = {
         "step": step,
@@ -90,8 +88,9 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
         leaves.append(arr)
     tree = jax.tree.unflatten(treedef, leaves)
     if shardings is not None:
-        if not isinstance(shardings, (dict, list, tuple)):
-            tree = jax.tree.map(lambda a: jax.device_put(a, shardings), tree)
-        else:
-            tree = jax.tree.map(jax.device_put, tree, shardings)
+        tree = (
+            jax.tree.map(jax.device_put, tree, shardings)
+            if isinstance(shardings, (dict, list, tuple))
+            else jax.tree.map(lambda a: jax.device_put(a, shardings), tree)
+        )
     return tree

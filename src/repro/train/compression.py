@@ -17,8 +17,7 @@ import jax.numpy as jnp
 
 
 def _quantize(x: jnp.ndarray, scale: jnp.ndarray):
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
 
 
 def compressed_psum(grad, err, axis: str):

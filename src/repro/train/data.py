@@ -40,8 +40,7 @@ def _bigram_table(vocab: int, seed: int) -> np.ndarray:
     """A fixed sparse-ish bigram distribution: each token has 4 likely
     successors. Gives the LM a learnable signal (used by examples/tests)."""
     rng = np.random.default_rng(seed + 12345)
-    succ = rng.integers(0, vocab, (vocab, 4))
-    return succ
+    return rng.integers(0, vocab, (vocab, 4))
 
 
 def markov_batch(cfg: DataConfig, step: int, host: int = 0, num_hosts: int = 1):

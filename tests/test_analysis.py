@@ -1,0 +1,386 @@
+"""The static verifier's two-sided contract, plus the jaxpr auditor's.
+
+Side one (mutation fuzzing): take VALID planner output, inject one
+defect of a known class, and the lint report must NAME that class by
+rule id — nine distinct defect classes below, each with a deterministic
+expected rule. Side two (zero false positives): every rule stays silent
+on everything the real optimizer + capacity planner emit, across the
+whole analysis corpus. A verifier missing either side is worse than no
+verifier: silent on bugs, or crying wolf on good plans.
+
+The jaxpr auditor gets the same treatment: hand-built programs that
+exhibit each hazard (callback sync point, unrolled probe loop, baked
+buffer const) must be flagged, and the corpus's real compiled executor
+must come back clean. Finally, the explicit-transfer discipline the
+auditor assumes is locked by a jax.transfer_guard("disallow") regression
+test around the warm batched serving step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    PlanVerificationError,
+    Report,
+    audit_jaxpr,
+    audit_runner,
+    lint_capacities,
+    lint_chain,
+    lint_plan,
+    lint_query,
+    lint_schedule,
+    lint_stage_dag,
+    lint_template,
+    lint_tree,
+)
+from repro.analysis.corpus import build_runner, corpus_cases
+from repro.core.api import ExecOptions
+from repro.core.capacity import plan_chain_capacities
+from repro.core.compiled import StaticSchedule, _static_schedule
+from repro.core.optimizer import JoinOrderOptimizer, Stats
+from repro.core.plan import FreeJoinPlan, Subatom, stage_plans
+from repro.relational.schema import Atom, Query
+from repro.serve.join_engine import JoinServeEngine
+from repro.serve.templates import canonicalize
+
+CASES = {c.name: c for c in corpus_cases()}
+
+
+def _planned(case):
+    """Fresh planner output for a corpus case, no compilation: the stage
+    chain and its ChainCapacityPlan exactly as _acquire_runner derives
+    them before the executor build."""
+    stats = Stats(case.relations, cached=True)
+    tree = JoinOrderOptimizer().choose(case.query, case.relations, stats=stats)
+    stages = stage_plans(case.query, tree)
+    chain = plan_chain_capacities(stages, stats=stats)
+    return stages, chain
+
+
+# ---------------------------------------------------------------------------
+# Side two first: zero false positives on real planner output
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_corpus_plans_lint_clean(name):
+    case = CASES[name]
+    stages, chain = _planned(case)
+    rep = lint_chain(
+        stages, chain, filter_vars=case.filter_vars, batch=case.batch
+    )
+    assert not rep.diagnostics, f"false positive(s) on {name}:\n{rep}"
+
+
+@pytest.mark.parametrize("name", ["star-filtered", "star-batched"])
+def test_corpus_templates_idempotent(name):
+    case = CASES[name]
+    template, _ = canonicalize(
+        case.query, case.relations, case.filters, options=case.options
+    )
+    rep = lint_template(template)
+    assert rep.ok, str(rep)
+
+
+# ---------------------------------------------------------------------------
+# Side one: mutation fuzzing — every injected defect class is NAMED
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_unbound_probe_var():
+    stages, _ = _planned(CASES["triangle"])
+    plan = stages[-1][1]
+    nodes = [list(n) for n in plan.nodes]
+    # rename a probe subatom's var to one nothing ever binds
+    for node in nodes:
+        if len(node) > 1 and node[1].vars:
+            node[1] = Subatom(node[1].alias, ("__never_bound",))
+            break
+    bad = FreeJoinPlan(plan.query, nodes)
+    rules = lint_plan(bad).rules()
+    assert "unbound-probe-var" in rules
+    assert "plan-not-partitioning" in rules  # the rename also breaks Def 3.5
+
+
+def test_mutation_missing_cover():
+    case = CASES["triangle"]
+    # node 1 introduces BOTH y and z, but its subatoms each carry only one
+    # of them — no subatom contains all new vars, so no cover (Def 3.7)
+    bad = FreeJoinPlan(
+        case.query,
+        [
+            [Subatom("R", ("x",))],
+            [Subatom("S", ("y",)), Subatom("T", ("z",))],
+        ],
+    )
+    assert "node-missing-cover" in lint_plan(bad).rules()
+
+
+def test_mutation_unbound_head_var():
+    case = CASES["star"]
+    q = Query(case.query.atoms, head=(*case.query.head, "__alien"))
+    assert "unbound-head-var" in lint_query(q).rules()
+
+
+def test_mutation_schedule_level_swap():
+    stages, _ = _planned(CASES["triangle"])
+    plan = stages[-1][1]
+    sched = _static_schedule(plan)
+    alias = next(a for a, lo in sched.level_ops.items() if len(lo.levels) >= 2)
+    lo = sched.level_ops[alias]
+    corrupted = StaticSchedule(
+        entries=sched.entries,
+        level_ops={
+            **sched.level_ops,
+            alias: dataclasses.replace(lo, levels=lo.levels[::-1]),
+        },
+    )
+    assert "schedule-level-mismatch" in lint_schedule(plan, corrupted).rules()
+
+
+def test_mutation_capacity_zero():
+    stages, chain = _planned(CASES["star"])
+    _name, plan = stages[-1]
+    cp = chain.stages[-1]
+    bad = dataclasses.replace(cp, capacities=(0,) + cp.capacities[1:])
+    assert "capacity-not-positive" in lint_capacities(plan, bad).rules()
+
+
+def test_mutation_capacity_over_agm():
+    stages, chain = _planned(CASES["star"])
+    _name, plan = stages[-1]
+    cp = chain.stages[-1]
+    assert cp.agm, "planner must record AGM bounds for this check to bite"
+    bad = dataclasses.replace(cp, capacities=(10**9,) + cp.capacities[1:])
+    assert "capacity-over-agm" in lint_capacities(plan, bad).rules()
+
+
+def test_mutation_compact_target_oversize():
+    stages, chain = _planned(CASES["star"])
+    _name, plan = stages[-1]
+    cp = chain.stages[-1]
+    ct = list(cp.compact_to)
+    ct[0] = cp.capacities[0]  # "compacting" into a buffer the same size
+    bad = dataclasses.replace(cp, compact_to=tuple(ct))
+    assert "compact-target-oversize" in lint_capacities(plan, bad).rules()
+
+
+def test_mutation_stage_order_break():
+    stages, _ = _planned(CASES["bushy"])
+    assert len(stages) >= 2, "bushy corpus case must decompose into stages"
+    reordered = [stages[-1], *stages[:-1]]  # root first: reads stages not yet defined
+    rules = lint_stage_dag(reordered).rules()
+    assert "stage-dag-order" in rules
+    assert "stage-root-last" in rules
+
+
+def test_mutation_stage_schema_mismatch():
+    stages, _ = _planned(CASES["bushy"])
+    name, root = stages[-1]
+    stage_names = {n for n, _ in stages}
+    atoms = []
+    broke = False
+    for a in root.query.atoms:
+        if not broke and a.alias in stage_names:
+            atoms.append(Atom(a.name, a.vars[:-1], a.alias))  # drop a column
+            broke = True
+        else:
+            atoms.append(a)
+    assert broke, "bushy root stage must reference an earlier stage"
+    bad_root = FreeJoinPlan(Query(atoms), root.nodes)
+    mutated = [*stages[:-1], (name, bad_root)]
+    assert "stage-schema-mismatch" in lint_stage_dag(mutated).rules()
+
+
+def test_mutation_filter_unbound():
+    stages, chain = _planned(CASES["star"])
+    rep = lint_chain(stages, chain, filter_vars=("__nope",))
+    assert "filter-unbound" in rep.rules()
+
+
+def test_mutation_plan_tree_atoms():
+    case = CASES["triangle"]
+    # a tree over only two of the three atoms
+    a, b, _c = case.query.atoms
+    from repro.core.plan import BinaryPlan
+
+    rep, stages = lint_tree(case.query, BinaryPlan(a, b))
+    assert stages is None
+    assert "plan-tree-atoms" in rep.rules()
+
+
+def test_defect_class_coverage():
+    """The ISSUE floor: >= 5 distinct defect classes detectable by rule."""
+    detectable = {
+        "unbound-probe-var",
+        "plan-not-partitioning",
+        "node-missing-cover",
+        "unbound-head-var",
+        "schedule-level-mismatch",
+        "capacity-not-positive",
+        "capacity-over-agm",
+        "compact-target-oversize",
+        "stage-dag-order",
+        "stage-schema-mismatch",
+        "filter-unbound",
+        "plan-tree-atoms",
+    }
+    assert len(detectable) >= 5
+
+
+# ---------------------------------------------------------------------------
+# jaxpr audit: hazards flagged, real executors clean
+# ---------------------------------------------------------------------------
+
+
+def test_audit_flags_callback():
+    def f(x):
+        jax.debug.callback(lambda v: None, x)
+        return x * 2
+
+    jaxpr = jax.make_jaxpr(f)(jnp.arange(4))
+    rep = audit_jaxpr(jaxpr, expect_loop=False)
+    assert "host-callback" in rep.rules()
+
+
+def test_audit_flags_unrolled_loop():
+    def f(x):
+        idx = jnp.argsort(x)
+        for _ in range(40):  # a python loop traced into 40 gathers
+            x = x[idx]
+        return x
+
+    jaxpr = jax.make_jaxpr(f)(jnp.arange(8))
+    rep = audit_jaxpr(jaxpr, expect_loop=True)
+    assert "probe-loop-unrolled" in rep.rules()
+    assert "probe-loop-missing" in rep.rules()  # and no while/scan anywhere
+
+
+def test_audit_flags_baked_buffer():
+    big = jnp.arange(100_000)
+
+    def f(i):
+        return big[i]
+
+    jaxpr = jax.make_jaxpr(f)(jnp.int32(3))
+    rep = audit_jaxpr(jaxpr, expect_loop=False)
+    assert "captured-buffer-const" in rep.rules()
+
+
+def test_audit_accepts_rolled_loop():
+    def f(x):
+        return jax.lax.fori_loop(0, 40, lambda i, v: v[jnp.argsort(v)], x)
+
+    jaxpr = jax.make_jaxpr(f)(jnp.arange(8))
+    rep = audit_jaxpr(jaxpr, expect_loop=True)
+    assert rep.ok, str(rep)
+
+
+def test_audit_clean_on_compiled_star_runner():
+    """The acceptance bar's audit half, in-tree: the production executor
+    for the star corpus case (the bench star shape) audits clean."""
+    case = CASES["star"]
+    runner, rels = build_runner(case)
+    runner.run_relations(rels)
+    rep = audit_runner(runner, rels, name="star")
+    assert rep.ok, str(rep)
+
+
+# ---------------------------------------------------------------------------
+# wiring: ExecOptions.verify, optimizer debug_lint, submit-time rejection
+# ---------------------------------------------------------------------------
+
+
+def test_exec_options_verify_passes_on_valid_query():
+    case = CASES["triangle"]
+    from repro.core.api import compiled_free_join
+
+    n_plain = compiled_free_join(case.query, case.relations)
+    n_verified = compiled_free_join(
+        case.query, case.relations, options=ExecOptions(verify=True)
+    )
+    assert n_plain == n_verified
+
+
+def test_optimizer_debug_lint_passes_on_corpus():
+    case = CASES["bushy"]
+    opt = JoinOrderOptimizer(debug_lint=True)
+    tree = opt.choose(case.query, case.relations)
+    assert tree is not None
+
+
+def test_submit_rejects_invalid_head_without_crash():
+    """Admission-time verification: a query whose head names a variable no
+    atom binds is REJECTED (handle errored, counter bumped, nothing
+    enqueued) — canonicalize would silently drop the head var, and the
+    old behavior served a silently-wrong projection."""
+    case = CASES["star"]
+    bad_q = Query(case.query.atoms, head=(*case.query.head, "__alien"))
+    eng = JoinServeEngine(slots=2)
+    before = eng.admission.rejected
+    req = eng.submit(bad_q, case.relations, {"y": 3}, tenant="t0")
+    assert req.done and isinstance(req.error, PlanVerificationError)
+    assert "unbound-head-var" in req.error.report.rules()
+    assert eng.admission.rejected == before + 1
+    assert not eng.queue  # never enqueued: co-batched tenants are spared
+    # a good request on the same engine still serves normally
+    ok = eng.submit(case.query, case.relations, {"y": 3}, tenant="t0")
+    eng.run()
+    assert ok.done and ok.error is None
+
+
+def test_submit_rejects_unknown_filter_var():
+    case = CASES["star"]
+    eng = JoinServeEngine(slots=2)
+    req = eng.submit(case.query, case.relations, {"__nope": 1})
+    assert req.done and req.error is not None
+    assert not eng.queue
+
+
+# ---------------------------------------------------------------------------
+# explicit-transfer discipline: the warm batched serving step performs
+# ZERO implicit host transfers
+# ---------------------------------------------------------------------------
+
+
+def test_warm_batched_dispatch_zero_implicit_transfers():
+    case = CASES["star"]
+    eng = JoinServeEngine(slots=4)
+
+    def submit_round(c0):
+        return [
+            eng.submit(case.query, case.relations, {"y": c0 + i}, tenant=f"t{i}")
+            for i in range(4)
+        ]
+
+    warm = submit_round(0)
+    eng.run()
+    assert all(r.done and r.error is None for r in warm)
+    # second round: same template, cached runner, cached tries, uploaded
+    # columns — under transfer_guard("disallow") any *implicit* host
+    # transfer raises; explicit device_put/device_get remain legal
+    reqs = submit_round(10)
+    with jax.transfer_guard("disallow"):
+        eng.run()
+    assert all(r.done and r.error is None for r in reqs)
+    for r in reqs:
+        assert isinstance(r.result, int)
+
+
+def test_report_surface():
+    rep = Report()
+    assert rep.ok and not rep
+    rep.warning("w-rule", "p", "m")
+    assert rep.ok and rep  # warnings don't fail
+    rep.error("e-rule", "p2", "m2")
+    assert not rep.ok
+    assert rep.rules() == {"w-rule", "e-rule"}
+    with pytest.raises(PlanVerificationError) as ei:
+        rep.raise_errors()
+    assert ei.value.report is rep
+    assert "e-rule" in str(ei.value)

@@ -21,10 +21,11 @@ def test_forward_and_train_step(arch):
     key = jax.random.PRNGKey(0)
     params = init_params(key, cfg)
     b, s = 2, 16
-    if spec.modality == "text":
-        inputs = jax.random.randint(key, (b, s), 0, cfg.vocab)
-    else:
-        inputs = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    inputs = (
+        jax.random.randint(key, (b, s), 0, cfg.vocab)
+        if spec.modality == "text"
+        else jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    )
     logits = apply_model(params, cfg, inputs)
     assert logits.shape == (b, s, cfg.vocab)
     assert not bool(jnp.isnan(logits).any())
