@@ -18,6 +18,10 @@ sneaking back into the warm path), not single-digit drift.
 Rows whose name ends in `_qps` carry a throughput (higher is better) in
 the value column instead of a latency; the gate inverts the ratio for
 them, failing when throughput drops below baseline/factor.
+
+When $GITHUB_STEP_SUMMARY is set (any GitHub Actions job), the per-row
+comparison is also rendered there as a markdown table, so a failing gate
+shows which rows moved without digging through the log.
 """
 from __future__ import annotations
 
@@ -37,6 +41,34 @@ def read_csv(path: str) -> dict[str, float]:
             if len(parts) >= 2 and parts[0]:
                 rows[parts[0]] = float(parts[1])
     return rows
+
+
+def _write_step_summary(table, factor: float, failed: list[str]) -> None:
+    """Render the per-row comparison as markdown into $GITHUB_STEP_SUMMARY
+    (no-op outside Actions). `_qps` rows show throughput values; every
+    ratio is normalized so >1 means worse."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path or not table:
+        return
+    verdict = f"FAILED ({len(failed)} row(s) past {factor:.1f}x)" if failed else "passed"
+    lines = [
+        f"### Perf regression gate: {verdict}",
+        "",
+        "| row | baseline | measured | ratio |",
+        "|---|---:|---:|---:|",
+    ]
+    for name, base, got, ratio, status in table:
+        unit = "qps" if name.endswith("_qps") else "µs"
+        mark = " ⚠️" if status in ("FAIL", "missing") else ""
+        if got is None:
+            lines.append(f"| `{name}` | {base:.1f} {unit} | missing | — {mark}|")
+        else:
+            lines.append(
+                f"| `{name}` | {base:.1f} {unit} | {got:.1f} {unit} | {ratio:.2f}x{mark} |"
+            )
+    lines.append("")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main() -> int:
@@ -67,11 +99,12 @@ def main() -> int:
         print("no smoke_baseline recorded; nothing to gate")
         return 0
     factor = float(os.environ.get("BENCH_REGRESSION_FACTOR", "2.0"))
-    failed = []
+    failed, table = [], []
     for name, base_us in sorted(baseline.items()):
         got = rows.get(name)
         if got is None:
             failed.append(f"{name}: missing from {args.csv} (baseline {base_us:.0f}us)")
+            table.append((name, base_us, None, None, "missing"))
             continue
         if name.endswith("_qps"):  # throughput row: regression = DROP
             ratio = base_us / got if got else float("inf")
@@ -81,11 +114,13 @@ def main() -> int:
             unit = "us"
         status = "FAIL" if ratio > factor else "ok"
         print(f"{status:>4}  {name:<42} {got:>12.0f}{unit}  baseline {base_us:>10.0f}{unit}  {ratio:5.2f}x")
+        table.append((name, base_us, got, ratio, status))
         if ratio > factor:
             failed.append(
                 f"{name}: {got:.0f}{unit} regressed more than {factor:.1f}x "
                 f"from baseline {base_us:.0f}{unit}"
             )
+    _write_step_summary(table, factor, failed)
     if failed:
         print(f"\n{len(failed)} row(s) regressed more than {factor:.1f}x:", file=sys.stderr)
         for f_ in failed:

@@ -15,7 +15,17 @@ import time
 
 from benchmarks.common import emit
 
-SUITES = ["job", "lsqb", "colt", "vectorization", "robustness", "kernels", "join_perf", "serving"]
+SUITES = [
+    "job",
+    "lsqb",
+    "colt",
+    "vectorization",
+    "robustness",
+    "kernels",
+    "join_perf",
+    "serving",
+    "streaming",
+]
 
 # per-suite kwargs for --smoke (every run() signature differs)
 SMOKE_ARGS: dict[str, dict] = {
@@ -27,6 +37,7 @@ SMOKE_ARGS: dict[str, dict] = {
     "kernels": dict(repeats=1),
     "join_perf": dict(smoke=True, repeats=1),
     "serving": dict(smoke=True, repeats=1),
+    "streaming": dict(smoke=True, repeats=1),
 }
 
 

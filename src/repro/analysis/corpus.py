@@ -50,6 +50,10 @@ class Case:
     batch: int | None = None
     agg: str | None = "count"
     options: ExecOptions = ExecOptions()
+    # applied to the runner's relations AFTER a first warm run, so the
+    # audited executor consumes delta-merged (padded, weighted) tries
+    # instead of cold builds — see build_runner
+    mutate: object = field(default=None, hash=False, compare=False)
 
     @property
     def filter_vars(self) -> tuple[str, ...]:
@@ -162,6 +166,30 @@ def corpus_cases(seed: int = 0) -> list[Case]:
     )
     cases.append(Case("bushy", bushy_q, bushy_rels))
 
+    # the star again over delta-built tries: the runner's first (warm) run
+    # builds cold, then rows are appended and tombstoned through the
+    # relcache mutation API — the audited program consumes level buffers
+    # produced by the sorted-run merge (padded to the capacity bucket,
+    # PAD_KEY tail, multiplicity-weighted), the PR 9 storage contract
+    delta_rng = np.random.default_rng(seed + 17)
+
+    def _star_mutate(rels):
+        from repro.core import relcache
+
+        r = rels["R"]
+        relcache.append(
+            r,
+            {v: delta_rng.integers(0, 150, 64).astype(np.int64) for v in ("x", "y")},
+        )
+        relcache.delete(r, np.arange(8))
+
+    delta_rels = {
+        "R": _edges(rng, 2000, 150, "x", "y", "R"),
+        "S": _edges(rng, 2000, 150, "y", "a", "S"),
+        "T": _edges(rng, 2000, 150, "y", "b", "T"),
+    }
+    cases.append(Case("star-delta", star_q, delta_rels, mutate=_star_mutate))
+
     # serving template, kill-mode filters (unbatched): constants are
     # runtime inputs, capacities planned for the selected slice
     cases.append(Case("star-filtered", star_q, star_rels, filters={"y": 7}))
@@ -194,4 +222,10 @@ def build_runner(case: Case):
         filter_vars=case.filter_vars,
         batch=case.batch,
     )
+    if case.mutate is not None:
+        # warm run builds the cold tries, then the mutation goes through
+        # the relcache delta API: the caller's next run (the audit pass)
+        # is served merged level buffers, not a rebuild
+        runner.run_relations(rels, filter_consts=case.filter_consts)
+        case.mutate(rels)
     return runner, rels

@@ -22,6 +22,12 @@ capacity to that need and retries (see compiled.AdaptiveExecutor and
 distributed.spmd_count — the same plan drives both the local and the SPMD
 path), so the plan here only has to be right on average, not in the worst
 case.
+
+Mutating relations (core/relcache.py) need no special casing here: the
+Stats the estimates are built from are delta-aware — Stats.size reports
+live rows (tombstones excluded) and distinct counts are maintained
+incrementally on append — so capacity plans over a mutated relation see
+its current live cardinalities, not the physical padded buffers.
 """
 from __future__ import annotations
 

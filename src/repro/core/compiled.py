@@ -41,6 +41,25 @@ programs with an explicit contract between them:
   padded frontier lanes of one specific run, so reuse across runs would
   serve stale intermediates.
 
+* Since PR 9 the cache has a DELTA path for relations mutated through
+  core/relcache.py's append/delete API, replacing rebuild-on-any-change.
+  A mutating relation's trie is padded to a power-of-two capacity bucket
+  (_bucket), pad rows carrying PAD_KEY keys and multiplicity 0 so they
+  sort to the tail and weigh nothing. An append sorts ONLY the delta
+  (segmented radix kernel, the delta's own key width) and splices the
+  sorted run into the cached level buffers with a rank-merge
+  (_merge_append_jit): lex_searchsorted ranks each delta row against the
+  old sorted order, position arithmetic scatters both runs into the new
+  order, and the trie is rebuilt through the presorted constructor
+  bypass — zero sort passes over old rows. The real row count crosses
+  the jit boundary as a device scalar, so same-bucket appends reuse one
+  compiled merge program. A delete tombstones rows in place
+  (_retire_rows_jit zeroes their weights and refreshes group weights);
+  when live/total drops below the state's compact_ratio, relcache
+  compacts and the next access pays one honest rebuild. Counters
+  (delta_merges, tombstone_refreshes) make the contract testable:
+  appends move delta_merges while builds stands still.
+
 Bushy plans run fully compiled (Sec 2.2): make_chain_executor strings every
 stage's executor into ONE on-device program — a non-root stage runs with
 agg=None, its output columns stay on device as a padded buffer (invalid
@@ -209,7 +228,13 @@ class StaticTrie:
         if self.trivial:  # pure cover: iterate the base table, zero build
             return
         all_vars = [v for lv in lops.levels for v in lv]
-        if key_bits is not None and not self.empty and mult is None:  # noqa: SIM108
+        if init_order is not None and presorted >= len(all_vars) and not self.empty:
+            # delta-merge build (TrieCache._merge_append): the caller already
+            # holds the full lexicographic permutation — spliced from a cached
+            # sorted run and a sorted delta — so the build pays zero sorting
+            # passes, only the group-structure scans below
+            order = init_order
+        elif key_bits is not None and not self.empty and mult is None:
             order = ops.segmented_sort(
                 [self.cols[v] for v in all_vars],
                 tuple(key_bits),
@@ -443,6 +468,127 @@ def _build_trie_jit(cols, lops, impl, budget, key_bits, init_order, presorted):
     )
 
 
+def _bucket(n: int, block: int = 1024) -> int:
+    """Physical capacity for a mutating relation's padded trie: the next
+    power of two >= n (min `block`). Appends within a bucket keep every
+    array shape fixed — the merge program retraces only at bucket growth."""
+    return max(block, 1 << max(0, n - 1).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("lops", "impl", "budget"))
+def _build_weighted_jit(cols, mult, lops, impl, budget):
+    """Full rebuild of a mutating relation's padded+weighted trie (cold
+    build, post-compaction, or a pruned delta log). Pads carry PAD_KEY keys
+    and mult 0; the lexsort routes them to the tail, where every later
+    merge expects them."""
+    return build_trie(cols, lops, impl=impl, budget=budget, mult=mult)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lops", "impl", "budget", "cap", "delta_bits", "has_mult"),
+)
+def _merge_append_jit(
+    old_cols,
+    old_mult,
+    old_sorted,
+    old_order,
+    n_real,
+    delta_cols,
+    *,
+    lops,
+    impl,
+    budget,
+    cap,
+    delta_bits,
+    has_mult,
+):
+    """Splice a sorted delta run into a cached padded trie — the delta
+    build program. Sorts ONLY the delta (segmented radix kernel over the
+    delta's own key widths), binary-searches each delta tuple's slot in the
+    cached sorted run (ops.lex_searchsorted), and derives the merged
+    permutation arithmetically; the constructor's presorted bypass then
+    rebuilds the group structure with zero sorting passes.
+
+    Shape discipline: every input keeps its bucket capacity and `n_real`
+    (the live+tombstone prefix length) is a DEVICE scalar, so a stream of
+    same-size appends within one bucket re-enters one compiled program —
+    no retrace per append. Pad rows (keys PAD_KEY, mult 0) sort after all
+    real rows, so they stay a contiguous tail that the merge shifts and
+    renormalizes with pure elementwise ops; scatters use mode="drop" for
+    the pads pushed past the (possibly grown) capacity `cap`."""
+    flat = [v for lv in lops.levels for v in lv]
+    some = next(iter(delta_cols.values()))
+    m = some.shape[0]
+    c_old = next(iter(old_cols.values())).shape[0]
+    n_new = n_real + m  # dynamic value, static bound cap >= host n_real + m
+    idx = jnp.arange(cap, dtype=jnp.int32)
+
+    def extend(a, fill):
+        if cap > c_old:
+            a = jnp.concatenate([a, jnp.full(cap - c_old, fill, jnp.int32)])
+        return a
+
+    new_cols = {}
+    for v in old_cols:
+        delta = delta_cols[v].astype(jnp.int32)
+        new_cols[v] = jax.lax.dynamic_update_slice(
+            extend(old_cols[v], PAD_KEY), delta, (n_real,)
+        )
+    om = old_mult if has_mult else jnp.ones(c_old, jnp.int32)
+    om = jnp.where(jnp.arange(c_old, dtype=jnp.int32) < n_real, om, 0)
+    new_mult = jax.lax.dynamic_update_slice(
+        extend(om, 0), jnp.ones(m, jnp.int32), (n_real,)
+    )
+    new_mult = jnp.where(idx < n_new, new_mult, 0)
+    if len(lops.levels) == 1 and not lops.probed[0]:
+        # trivial (cover-only) trie: no order to maintain, just new columns
+        return build_trie(new_cols, lops, impl=impl, budget=budget, mult=new_mult)
+    # sort the delta among itself, then locate each tuple's splice slot
+    delta_order = ops.segmented_sort(
+        [delta_cols[v].astype(jnp.int32) for v in flat], tuple(delta_bits), impl=impl
+    ).astype(jnp.int32)
+    ds = {v: delta_cols[v].astype(jnp.int32)[delta_order] for v in flat}
+    # rank in the cached sorted run; real keys < PAD_KEY, so ranks never
+    # land inside the pad tail and the merged real prefix is exactly n_new
+    rank = ops.lex_searchsorted([old_sorted[v] for v in flat], [ds[v] for v in flat])
+    pos_delta = rank + jnp.arange(m, dtype=jnp.int32)
+    k = jnp.arange(c_old, dtype=jnp.int32)
+    pos_old = k + jnp.searchsorted(rank, k, side="right").astype(jnp.int32)
+    # delta rows take indices [n_real, n_new); old pads shift up by m
+    adj = old_order + jnp.where(old_order >= n_real, m, 0).astype(jnp.int32)
+    new_order = jnp.zeros(cap, jnp.int32)
+    new_order = new_order.at[pos_old].set(adj, mode="drop")
+    new_order = new_order.at[pos_delta].set(n_real + delta_order, mode="drop")
+    # pads are interchangeable: identity-map the tail so `new_order` stays a
+    # permutation regardless of how many pads the scatters dropped
+    new_order = jnp.where(idx >= n_new, idx, new_order)
+    return build_trie(
+        new_cols,
+        lops,
+        impl=impl,
+        budget=budget,
+        mult=new_mult,
+        init_order=new_order,
+        presorted=len(flat),
+    )
+
+
+@jax.jit
+def _retire_rows_jit(mult, order, groups, rows):
+    """Tombstone catch-up on a cached trie: zero the rows' multiplicity and
+    refresh the per-level weight aggregates. The sort order, group
+    structure, and hash tables are untouched — dead rows keep their slots
+    and simply weigh nothing."""
+    mult = mult.at[rows].set(0)
+    total = jnp.sum(mult)
+    sm = mult[order] if order is not None else mult
+    weights = [
+        jax.ops.segment_sum(sm, gd1, num_segments=mult.shape[0]) for gd1 in groups
+    ]
+    return mult, total, weights
+
+
 def device_columns(rel) -> dict[str, jnp.ndarray]:
     """Registry-cached int32 device upload of a relation's columns: each
     host column is transferred once per (relation object, column object)
@@ -475,8 +621,29 @@ class TrieCache:
     the shared passes. Weighted builds are refused — stage-output tries are
     one run's padded lanes and must never be served across runs.
 
-    Counters (builds/table_builds/hits/order_shares) are the observable
-    contract the tests lock: a repeated identical call must be all hits.
+    MUTATING relations (those with a relcache.MutationState, i.e. touched
+    by relcache.append/delete) take the versioned DELTA path instead of
+    identity revalidation. Their entries carry the mutation version they
+    materialized at plus `n_real` (live+tombstone row prefix), and the trie
+    itself is padded to a power-of-two bucket — pad rows carry PAD_KEY keys
+    and multiplicity 0, sorted to a contiguous tail. Serving one then means:
+
+    * version match — pure cache hit, zero device work;
+    * version behind — replay `deltas_since`: an append sorts ONLY the
+      delta and splices it into the cached sorted run (_merge_append_jit,
+      zero full re-sorts; `delta_merges` counts these), a delete refreshes
+      the weight aggregates in place (`tombstone_refreshes`);
+    * log pruned / compaction crossed / negative delta keys — full padded
+      weighted rebuild (counted in `builds`, like any cold build).
+
+    A trie built BEFORE the relation's first mutation is adopted as the
+    version-0 merge base when it matches the state's version-0 device
+    columns, so warm-then-stream never pays a rebuild.
+
+    Counters (builds/table_builds/hits/order_shares/delta_merges/
+    tombstone_refreshes) are the observable contract the tests lock: a
+    repeated identical call must be all hits, and an append followed by a
+    query must bump delta_merges — never builds.
     """
 
     def __init__(self, registry: relcache.RelationRegistry | None = None):
@@ -485,6 +652,8 @@ class TrieCache:
         self.table_builds = 0  # lazy per-level table additions
         self.hits = 0  # fully served from cache: zero device work
         self.order_shares = 0  # builds that reused a cached sort order
+        self.delta_merges = 0  # appends absorbed by sorted-run splicing
+        self.tombstone_refreshes = 0  # deletes absorbed by weight refresh
 
     def _key_bits(self, rel, flat_vars) -> tuple[int, ...] | None:
         """Static per-var key widths for the radix sort, from the host
@@ -527,20 +696,16 @@ class TrieCache:
         # trivial-ness is part of the identity: a cover-only (table-less,
         # order-less) trie must never be served to a schedule that probes
         key = (lops.levels, impl, budget, trivial)
+        st = relcache.mutation_state(rel)
+        if st is not None:
+            return self._get_mutating(rel, st, dev_cols, lops, flat, key, impl, budget)
         entry = ns.get(key)
-        if entry is not None and all(entry["cols"][v] is used[v] for v in flat):
-            trie: StaticTrie = entry["trie"]
-            missing = [
-                d
-                for d, p in enumerate(lops.probed)
-                if p and not trie.trivial and trie.tables[d] is None
-            ]
-            for d in missing:
-                trie.tables[d] = trie.build_level_table(d, budget)
-                self.table_builds += 1
-            if not missing:
-                self.hits += 1
-            return trie.table_view(lops.probed)
+        if (
+            entry is not None
+            and entry.get("version") is None
+            and all(entry["cols"][v] is used[v] for v in flat)
+        ):
+            return self._serve(entry["trie"], lops, budget, count_hit=True)
         # miss: build, seeding the sort with any prefix-compatible cached
         # order over the same (identical) columns
         key_bits = self._key_bits(rel, flat)
@@ -548,8 +713,8 @@ class TrieCache:
         if key_bits is not None and not trivial:
             for (levels2, _i2, _b2, _t2), e2 in ns.items():
                 donor = e2["trie"]
-                if donor.order is None:
-                    continue
+                if donor.order is None or e2.get("version") is not None:
+                    continue  # padded mutating orders never seed plain builds
                 flat2 = tuple(v for lv in levels2 for v in lv)
                 share = 0
                 while (
@@ -566,6 +731,152 @@ class TrieCache:
         if presorted:
             self.order_shares += 1
         return trie.table_view(lops.probed)
+
+    def _serve(self, trie: StaticTrie, lops, budget, *, count_hit: bool):
+        """Fill any probe tables the request needs that the cached build
+        skipped (the lazy-COLT path), then hand out a probed view."""
+        missing = [
+            d
+            for d, p in enumerate(lops.probed)
+            if p and not trie.trivial and trie.tables[d] is None
+        ]
+        for d in missing:
+            trie.tables[d] = trie.build_level_table(d, budget)
+            self.table_builds += 1
+        if count_hit and not missing:
+            self.hits += 1
+        return trie.table_view(lops.probed)
+
+    def _get_mutating(self, rel, st, dev_cols, lops, flat, key, impl, budget):
+        """Serve a mutating relation: version-matched hit, delta catch-up
+        (merge appends, retire deletes), or full padded rebuild."""
+        ns = self._reg.namespace(rel, "tries")
+        entry = ns.get(key)
+        if entry is not None and entry.get("version") is None:
+            # built before the first mutation: adopt as the version-0 merge
+            # base iff it is over the state's version-0 device columns (and
+            # no compaction/pruning has moved the base past version 0)
+            trie = entry["trie"]
+            if (
+                st.base_version == 0
+                and not trie.empty
+                and all(entry["cols"].get(v) is st.dev0.get(v) for v in flat)
+            ):
+                entry["version"] = 0
+                entry["n_real"] = trie.n
+            else:
+                entry = None
+        deltas = None
+        if entry is not None:
+            deltas = st.deltas_since(entry["version"])
+            if deltas is None or entry["trie"].empty:
+                entry = None  # pruned log or sentinel empty trie: rebuild
+        if entry is not None:
+            trie = entry["trie"]
+            if not deltas:
+                return self._serve(trie, lops, budget, count_hit=True)
+            for _ver, kind, payload in deltas:
+                if kind == "append":
+                    merged = self._merge_append(
+                        trie, entry["n_real"], payload, lops, impl, budget
+                    )
+                    if merged is None:  # negative delta keys: lexsort only
+                        entry = None
+                        break
+                    trie = merged
+                    entry["n_real"] += len(next(iter(payload.values())))
+                    self.delta_merges += 1
+                else:
+                    self._retire(trie, payload)
+                    self.tombstone_refreshes += 1
+            if entry is not None:
+                entry["trie"] = trie
+                entry["cols"] = dict(trie.cols)
+                entry["version"] = st.version
+                return self._serve(trie, lops, budget, count_hit=False)
+        # full rebuild, padded to the bucket and weighted by the liveness
+        # mask, so later appends merge and later deletes retire in place
+        cap = _bucket(st.total)
+        pad = cap - st.total
+        used = {}
+        for v in flat:
+            dc = dev_cols[v]
+            used[v] = (
+                jnp.concatenate([dc, jnp.full(pad, PAD_KEY, jnp.int32)]) if pad else dc
+            )
+        if st.mult is not None:
+            hm = st.mult if pad == 0 else np.concatenate([st.mult, np.zeros(pad, np.int32)])
+            mult = jax.device_put(np.ascontiguousarray(hm))
+        else:
+            mult = (jnp.arange(cap, dtype=jnp.int32) < st.total).astype(jnp.int32)
+        trie = _build_weighted_jit(used, mult, lops, impl, budget)
+        ns[key] = {
+            "trie": trie,
+            "cols": dict(trie.cols),
+            "version": st.version,
+            "n_real": st.total,
+        }
+        self.builds += 1
+        return self._serve(trie, lops, budget, count_hit=False)
+
+    def _merge_append(self, trie, n_real, payload, lops, impl, budget):
+        """Host wrapper for one append log entry: delta key widths, bucket
+        growth, explicit device_put of the delta, and the probed-union lops
+        (a merge rebuilds every table the cached trie had accumulated, so
+        other schedules stay warm). Returns None when the delta has
+        negative keys — the radix delta sort cannot order those."""
+        flat = tuple(v for lv in lops.levels for v in lv)
+        m = len(next(iter(payload.values())))
+        bits = []
+        for v in flat:
+            col = payload[v]
+            if int(col.min()) < 0:
+                return None
+            bits.append(max(1, int(col.max()).bit_length()))
+        cap = _bucket(n_real + m)
+        delta_dev = {
+            v: jax.device_put(np.ascontiguousarray(payload[v].astype(np.int32)))
+            for v in flat
+        }
+        if trie.trivial:
+            mlops = lops
+        else:
+            mlops = replace(
+                lops,
+                probed=tuple(
+                    (t is not None) or p for t, p in zip(trie.tables, lops.probed)
+                ),
+            )
+        return _merge_append_jit(
+            {v: trie.cols[v] for v in flat},
+            trie.mult_col,
+            trie.sorted_cols,
+            trie.order,
+            jax.device_put(np.int32(n_real)),
+            delta_dev,
+            lops=mlops,
+            impl=impl,
+            budget=budget,
+            cap=cap,
+            delta_bits=tuple(bits),
+            has_mult=trie.mult_col is not None,
+        )
+
+    def _retire(self, trie, rows):
+        """Apply one delete log entry to the cached trie in place: rows are
+        host positions, which by the padding invariant are trie row indices
+        verbatim. Order, groups, and tables are untouched."""
+        mult = trie.mult_col
+        if mult is None:
+            mult = jnp.ones(trie.n, jnp.int32)
+        groups = [] if trie.trivial else trie.g[1:]
+        mult, total, weights = _retire_rows_jit(
+            mult, trie.order, groups, jax.device_put(rows)
+        )
+        trie.mult_col = mult
+        trie.total_mult = total
+        if not trie.trivial:
+            trie.row_weight = weights
 
 
 TRIE_CACHE = TrieCache()
@@ -1310,13 +1621,18 @@ class AdaptiveExecutor:
         data = {}
         for a in sorted(_base_aliases(self.stages)):
             rel = relations[a]
-            dev = device_columns(rel)
-            lo = self._alias_lops.get(a)
-            data[a] = (
-                TRIE_CACHE.get(rel, dev, lo, impl=self.impl, budget=self.budget)
-                if reuse_tries and lo is not None
-                else dev
-            )
+            if reuse_tries:
+                lo = self._alias_lops.get(a)
+                if lo is not None:
+                    data[a] = TRIE_CACHE.get(
+                        rel, device_columns(rel), lo, impl=self.impl, budget=self.budget
+                    )
+                    continue
+            # raw-column (in-graph build) path: a tombstoned relation must
+            # contribute its live rows only, so feed the per-version live
+            # snapshot — an unweighted in-graph build has no mult to kill
+            # the dead rows with
+            data[a] = device_columns(relcache.live_relation(rel))
         out = self(data, filter_consts)
         if not self.filter_vars or self.batch is not None:
             self._record_feedback(relations)

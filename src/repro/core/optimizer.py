@@ -89,7 +89,12 @@ class Stats:
         self._cached = cached
 
     def size(self, alias: str) -> int:
-        return self.relations[alias].num_rows
+        # live rows, not physical rows: a mutating relation's tombstones
+        # weigh nothing in the trie, so capacity/cost estimates that counted
+        # them would oversize every delta-maintained buffer
+        from repro.core import relcache
+
+        return relcache.live_size(self.relations[alias])
 
     def distinct(self, alias: str, var: str) -> float:
         key = (alias, var)

@@ -25,11 +25,35 @@ can never outlive (or be confused with) its relation:
 Values held here are strong references (device arrays, compiled
 executors): that is the point — they are the cache. Lifetime is bounded by
 the relations themselves plus the LRU bound on KeyedCache.
+
+Since PR 9 the registry also carries each relation's MUTATION STATE — the
+delta-build contract that replaced rebuild-on-any-change:
+
+* `append(rel, delta_cols)` extends the host columns AND primes every
+  identity-keyed memo (device upload, radix key width, distinct count)
+  with an incrementally-computed value, so the next planning/build pass
+  pays O(delta), not O(N). The delta itself lands in a bounded version log
+  that compiled.TrieCache replays: a cached trie catches up by sorting
+  only the delta (segmented radix kernel) and merging sorted runs — no
+  full re-sort.
+* `delete(rel, rows)` writes tombstones: rows keep their physical slots
+  with multiplicity 0 (the weighted-trie mult-fold makes them contribute
+  nothing). When live/total drops below the state's `compact_ratio`,
+  `compact()` physically drops dead rows — replacing the host column
+  objects, so every identity-keyed consumer sees the full rebuild a
+  compaction is.
+* Each mutation bumps the relation's `version` (a per-relation clock);
+  consumers that cache derived device state record the version they
+  materialized at and use `deltas_since(v)` to replay exactly the missing
+  suffix — or rebuild, when the suffix was pruned or a compaction reset
+  the clock.
 """
 from __future__ import annotations
 
 import weakref
 from collections import OrderedDict
+
+import numpy as np
 
 
 class RelationRegistry:
@@ -215,3 +239,244 @@ REGISTRY = RelationRegistry()
 
 # the process-wide measured-cardinality store (see CardFeedback)
 FEEDBACK = CardFeedback()
+
+
+# ---------------------------------------------------------------------------
+# Mutation state: the delta-build contract (see module docstring)
+# ---------------------------------------------------------------------------
+
+
+class MutationState:
+    """Versioned delta log + liveness mask for one mutating relation.
+
+    `version` is the relation's mutation clock: every append/delete/compact
+    bumps it. Consumers that cache derived device state (TrieCache entries,
+    standing-query stage fingerprints) record the version they materialized
+    at; `deltas_since(v)` returns the log suffix they must replay — or None
+    when that suffix was pruned or a compaction reset the clock, which
+    means "rebuild from scratch".
+
+    Tombstone semantics: `delete` never moves a row. The host-side `mult`
+    mask zeroes the row (device tries scatter the same rows into their mult
+    column), and the weighted-trie mult-fold makes dead rows contribute
+    nothing to counts or materialized outputs. Physical rows shrink only at
+    `compact()`, which runs automatically once live/total < `compact_ratio`.
+    """
+
+    def __init__(self, rel, *, compact_ratio: float = 0.5, max_log: int = 64):
+        self.version = 0
+        self.base_version = 0  # the log holds versions (base_version, version]
+        self.compact_ratio = compact_ratio
+        self.max_log = max_log
+        self.total = rel.num_rows  # physical host rows (live + tombstoned)
+        self.live = rel.num_rows
+        self.mult = None  # (total,) int32 host liveness mask; None = all live
+        self.log: list[tuple] = []  # (version, "append"|"delete", payload)
+        self.cols = dict(rel.columns)  # current column identities (authority)
+        self.cols0 = dict(rel.columns)  # pre-mutation identities (adoption)
+        self.uniques: dict[str, np.ndarray] = {}  # var -> sorted distincts
+        self._live_rel: tuple | None = None  # (version, Relation) snapshot
+        self.appends = 0
+        self.deletes = 0
+        self.compactions = 0
+        # device uploads of the version-0 columns, captured at state birth:
+        # the handle TrieCache uses to recognize a trie built BEFORE the
+        # first mutation and adopt it as the version-0 merge base (the
+        # "warm build, then stream" path pays no full rebuild at all)
+        dev_ns = REGISTRY.namespace(rel, "dev_cols")
+        self.dev0 = {}
+        for v in rel.schema:
+            hit = dev_ns.get(v)
+            if hit is not None and hit[0] is rel.columns[v]:
+                self.dev0[v] = hit[1]
+
+    def validate(self, rel) -> bool:
+        """True while the relation's columns are the ones this state last
+        produced. A column replaced behind the API's back (out-of-band
+        mutation) fails this, and the state abdicates — identity
+        revalidation of the plain memos regains authority."""
+        return all(self.cols.get(v) is rel.columns[v] for v in rel.schema)
+
+    def deltas_since(self, version: int) -> list[tuple] | None:
+        if version < self.base_version:
+            return None
+        return [e for e in self.log if e[0] > version]
+
+    def distinct(self, var: str) -> float | None:
+        """Incrementally-maintained distinct count (an upper bound after
+        deletes — tombstoned values are not retired until compaction)."""
+        u = self.uniques.get(var)
+        return None if u is None else float(max(1, len(u)))
+
+    def _prune(self) -> None:
+        while len(self.log) > self.max_log:
+            self.base_version = self.log.pop(0)[0]
+
+
+def mutation_state(rel) -> MutationState | None:
+    """The relation's mutation state, or None if it was never mutated
+    through this API (or was mutated out-of-band, which drops the stale
+    state so the identity-keyed caches see a plain full rebuild)."""
+    ns = REGISTRY.namespace(rel, "mutation")
+    st = ns.get("state")
+    if st is not None and not st.validate(rel):
+        del ns["state"]
+        return None
+    return st
+
+
+def _state_of(rel) -> MutationState:
+    ns = REGISTRY.namespace(rel, "mutation")
+    st = ns.get("state")
+    if st is None or not st.validate(rel):
+        st = MutationState(rel)
+        ns["state"] = st
+    return st
+
+
+def append(rel, delta_cols: dict) -> MutationState:
+    """Append rows to `rel` through the delta contract.
+
+    Host columns are extended in place (new array objects), and every
+    per-column memo is *primed* with an incrementally-computed value so the
+    next build/planning pass pays O(delta):
+
+    * "dev_cols": the cached device upload is extended by a device-side
+      concat of the delta — no O(N) host-to-device re-transfer;
+    * "key_bits": the radix sort width grows by a max over the delta;
+    * "distinct": one np.union1d over the delta against the maintained
+      sorted-distinct set (the optimizer's delta-aware size estimates).
+
+    The delta lands in the version log; compiled.TrieCache replays it by
+    sorting only the delta and merging sorted runs into the cached level
+    buffers (zero full re-sorts)."""
+    import jax.numpy as jnp  # deferred: relcache stays importable sans jax
+
+    st = _state_of(rel)
+    missing = set(rel.schema) - set(delta_cols)
+    if missing:
+        raise ValueError(f"append missing columns: {sorted(missing)}")
+    arrs = {v: np.asarray(delta_cols[v]) for v in rel.schema}
+    lens = {len(a) for a in arrs.values()}
+    if len(lens) > 1:
+        raise ValueError(f"ragged delta columns: {lens}")
+    m = lens.pop() if lens else 0
+    if m == 0:
+        return st
+    dev_ns = REGISTRY.namespace(rel, "dev_cols")
+    bit_ns = REGISTRY.namespace(rel, "key_bits")
+    dis_ns = REGISTRY.namespace(rel, "distinct")
+    log_cols = {}
+    for v in rel.schema:
+        old = rel.columns[v]
+        delta = arrs[v].astype(old.dtype, copy=False)
+        new = np.concatenate([old, delta])
+        hit = dev_ns.get(v)
+        if hit is not None and hit[0] is old:
+            dev_ns[v] = (new, jnp.concatenate([hit[1], jnp.asarray(delta, jnp.int32)]))
+        hit = bit_ns.get(v)
+        if hit is not None and hit[0] is old:
+            if hit[1] is None or int(delta.min()) < 0:
+                width = None
+            else:
+                width = max(hit[1], 1, int(delta.max()).bit_length())
+            bit_ns[v] = (new, width)
+        uniq = st.uniques.get(v)
+        if uniq is None:  # first append pays one full unique; then O(delta)
+            uniq = np.unique(old)
+        uniq = np.union1d(uniq, delta)
+        st.uniques[v] = uniq
+        dis_ns[v] = (new, float(max(1, len(uniq))))
+        rel.columns[v] = new
+        log_cols[v] = np.ascontiguousarray(delta)
+    rel.num_rows += m
+    if st.mult is not None:
+        st.mult = np.concatenate([st.mult, np.ones(m, np.int32)])
+    st.total += m
+    st.live += m
+    st.version += 1
+    st.appends += 1
+    st.log.append((st.version, "append", log_cols))
+    st._prune()
+    st.cols = dict(rel.columns)
+    st._live_rel = None
+    return st
+
+
+def delete(rel, rows) -> MutationState:
+    """Tombstone rows of `rel` by physical index (row i is column[i]).
+    Dead rows keep their slots with multiplicity 0 until live/total drops
+    below the state's compact_ratio, at which point compact() runs — the
+    "real rebuild" threshold of the delta contract."""
+    st = _state_of(rel)
+    rows = np.unique(np.asarray(rows, np.int64))
+    if rows.size == 0:
+        return st
+    if int(rows[0]) < 0 or int(rows[-1]) >= st.total:
+        raise IndexError(f"delete rows out of range [0, {st.total})")
+    if st.mult is None:
+        st.mult = np.ones(st.total, np.int32)
+    newly = int(np.count_nonzero(st.mult[rows]))
+    st.mult[rows] = 0
+    st.live -= newly
+    st.version += 1
+    st.deletes += 1
+    st.log.append((st.version, "delete", rows.astype(np.int32)))
+    st._prune()
+    st._live_rel = None
+    if st.total and st.live / st.total < st.compact_ratio:
+        compact(rel)
+    return st
+
+
+def compact(rel) -> int:
+    """Physically drop tombstoned rows. Host columns are REPLACED (new
+    array objects), so every identity-keyed memo and cached trie sees the
+    full rebuild a compaction is; the version log is cleared and
+    base_version advanced so no cached consumer can "catch up" across it.
+    Returns the number of rows dropped."""
+    st = _state_of(rel)
+    dropped = 0
+    if st.mult is not None:
+        mask = st.mult != 0
+        dropped = int(st.total - np.count_nonzero(mask))
+        if dropped:
+            for v in rel.schema:
+                rel.columns[v] = rel.columns[v][mask]
+        rel.num_rows = int(np.count_nonzero(mask))
+    st.mult = None
+    st.total = st.live = rel.num_rows
+    st.version += 1
+    st.compactions += 1
+    st.log.clear()
+    st.base_version = st.version
+    st.cols = dict(rel.columns)
+    st.cols0 = dict(rel.columns)
+    st.uniques.clear()  # deletes may have shrunk domains: recompute lazily
+    st._live_rel = None
+    return dropped
+
+
+def live_relation(rel):
+    """Live-rows host snapshot (tombstones dropped): the eager-path and
+    oracle view of a mutating relation. Cached per version, so repeated
+    calls at the same version return the identical object and downstream
+    identity-keyed memos (device uploads) stay warm."""
+    st = mutation_state(rel)
+    if st is None or st.mult is None or st.live == st.total:
+        return rel
+    if st._live_rel is not None and st._live_rel[0] == st.version:
+        return st._live_rel[1]
+    from repro.relational.relation import Relation  # deferred: no cycle
+
+    mask = st.mult != 0
+    snap = Relation(rel.name, {v: rel.columns[v][mask] for v in rel.schema})
+    st._live_rel = (st.version, snap)
+    return snap
+
+
+def live_size(rel) -> int:
+    """Live row count: num_rows minus tombstones (the size the optimizer's
+    delta-aware estimates should plan for)."""
+    st = mutation_state(rel)
+    return rel.num_rows if st is None else st.live

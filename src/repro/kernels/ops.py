@@ -25,7 +25,10 @@ from repro.kernels.compact import CBLK, compact_pallas
 from repro.kernels.csr_expand import OBLK, csr_expand_pallas
 from repro.kernels.hash_probe import PROBE_BUDGET, QBLK, hash_probe_pallas, mix32
 from repro.kernels.intersect import intersect_pallas
-from repro.kernels.radix_sort import segmented_sort  # noqa: F401  (impl trio inside)
+from repro.kernels.radix_sort import (  # noqa: F401  (impl trio inside)
+    lex_searchsorted,
+    segmented_sort,
+)
 
 
 class Table(NamedTuple):

@@ -196,3 +196,45 @@ def segmented_sort(
                 perm = _radix_pass(perm, starts, seg_last, digit, impl)
         seg = _refine_segments(seg, col[perm])
     return perm
+
+
+def lex_searchsorted(
+    sorted_cols: list[jnp.ndarray],
+    query_cols: list[jnp.ndarray],
+) -> jnp.ndarray:
+    """Per-query insertion rank (side="left") of each query tuple into the
+    lexicographically sorted rows of `sorted_cols` (cols[0] major).
+
+    The merge half of the delta trie build: the delta's rows are sorted
+    among themselves by `segmented_sort`, then this locates each one's slot
+    in the cached sorted run — the splice positions of a sorted-run merge
+    without a full re-sort. Same fixed-step binary-search shape as
+    `_rank_kernel`: ceil(log2(N+1)) gather rounds, each lane masked once
+    its bracket closes, so the whole search lowers under jit with static
+    iteration count. Lexicographic "row < query" is folded from the least
+    significant column backward: a < b at column d iff
+    (a_d < b_d) | (a_d == b_d & a_{<d-suffix} < b-suffix).
+    """
+    assert sorted_cols and len(sorted_cols) == len(query_cols)
+    n = int(sorted_cols[0].shape[0])
+    q = query_cols[0].shape[0]
+    if n == 0:
+        return jnp.zeros(q, dtype=jnp.int32)
+
+    def row_lt_query(pos):  # (Q,) bool: sorted row `pos[j]` < query j ?
+        lt = jnp.zeros(pos.shape, dtype=bool)
+        for sc, qc in zip(reversed(sorted_cols), reversed(query_cols)):
+            a = sc.astype(jnp.int32)[pos]
+            b = qc.astype(jnp.int32)
+            lt = (a < b) | ((a == b) & lt)
+        return lt
+
+    lo = jnp.zeros(q, dtype=jnp.int32)
+    hi = jnp.full(q, n, dtype=jnp.int32)
+    for _ in range(max(1, math.ceil(math.log2(n + 1)))):
+        mid = (lo + hi) // 2
+        lt = row_lt_query(jnp.clip(mid, 0, n - 1))
+        open_ = lo < hi
+        lo = jnp.where(open_ & lt, mid + 1, lo)
+        hi = jnp.where(open_ & ~lt, mid, hi)
+    return lo

@@ -10,14 +10,20 @@
   cached tries, and admission control (admission.py) rejects
   quota-violating queries instead of letting them trigger grow/recompile
   storms. See serve/README.md for the quota knobs.
+* **StandingQueryEngine** (standing.py) keeps registered join queries
+  *answered* as base relations mutate through the relcache delta API: each
+  refresh recomputes only the plan stages whose input fingerprints moved
+  (delta-merged tries from the versioned trie cache), replaying cached
+  device buffers for the rest.
 
-Both engines keep the batch shape static and vary only occupancy — the
+The engines keep the batch shape static and vary only occupancy — the
 TPU serving discipline the rest of the repo compiles against.
 """
 from repro.serve.admission import AdmissionController, AdmissionError, QueryQuota
 from repro.serve.engine import DecodeServeEngine, Request, ServeEngine
 from repro.serve.join_engine import JoinRequest, JoinServeEngine
 from repro.serve.paged_kv import PagedAllocator
+from repro.serve.standing import StandingQuery, StandingQueryEngine
 from repro.serve.templates import PlanTemplate, canonicalize
 
 __all__ = [
@@ -31,5 +37,7 @@ __all__ = [
     "QueryQuota",
     "Request",
     "ServeEngine",
+    "StandingQuery",
+    "StandingQueryEngine",
     "canonicalize",
 ]

@@ -1,0 +1,182 @@
+"""Delta trie builds over mutating relations (the PR 9 storage contract).
+
+What these tests lock down:
+
+* Parity: any interleaving of relcache.append / delete / compact leaves
+  compiled_free_join agreeing with the eager engine run over the live
+  snapshot — counts AND agg=None tuples (pads and tombstones must weigh
+  nothing and never surface).
+* Incrementality: a warm append is served by ONE delta merge — the cached
+  StaticTrie's builds counter does not move, only delta_merges does; a
+  delete is a tombstone weight refresh, never a rebuild.
+* Compaction: dropping below the live/total threshold triggers a real
+  rebuild that physically drops dead rows, after which results still match.
+* Shape stability: steady-state same-bucket appends reuse the merge
+  program — the jit cache stops growing after the two-append warmup (the
+  first merge adopts the unpadded cold trie, so its static signature is
+  unique; from the second append on, shapes are fixed).
+"""
+import numpy as np
+import pytest
+
+from repro.core import compiled_free_join, free_join, relcache, to_sorted_tuples
+from repro.core.compiled import TRIE_CACHE, _merge_append_jit
+from repro.relational.schema import Atom, Query, triangle_query
+from tests.conftest import rand_rel
+
+
+def _oracle(q, rels, agg):
+    live = {a: relcache.live_relation(r) for a, r in rels.items()}
+    return free_join(q, live, agg=agg)
+
+
+def _delta(rng, vars_, n, dom):
+    return {v: rng.integers(0, dom, n).astype(np.int32) for v in vars_}
+
+
+def _check_parity(q, rels):
+    assert compiled_free_join(q, rels, agg="count") == _oracle(q, rels, "count")
+    got = compiled_free_join(q, rels, agg=None)
+    assert to_sorted_tuples(got, q.head) == to_sorted_tuples(_oracle(q, rels, None), q.head)
+
+
+# ---- parity under random interleaved mutations ----------------------------
+
+
+def test_interleaved_mutations_match_oracle(rng):
+    """Randomly interleave appends, deletes, and forced compactions on all
+    three triangle relations; the compiled engine must match the eager
+    engine over the live snapshot at every step."""
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 120, 8) for a in q.atoms}
+    _check_parity(q, rels)  # cold build before any mutation
+
+    aliases = list(rels)
+    for step in range(12):
+        alias = aliases[int(rng.integers(len(aliases)))]
+        rel = rels[alias]
+        op = int(rng.integers(3))
+        if op == 0:
+            relcache.append(rel, _delta(rng, rel.schema, int(rng.integers(1, 60)), 8))
+        elif op == 1:
+            n = rel.num_rows
+            k = int(rng.integers(1, max(2, n // 4)))
+            relcache.delete(rel, rng.choice(n, size=min(k, n), replace=False))
+        else:
+            relcache.compact(rel)
+        _check_parity(q, rels)
+
+
+def test_append_new_keys_surface_in_tuples(rng):
+    """Appended rows with never-before-seen keys must appear in agg=None
+    output (regression guard for distinct/key-bits memo priming)."""
+    q = Query([Atom("R", ("x", "y")), Atom("S", ("y", "z"))])
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 50, 6) for a in q.atoms}
+    _check_parity(q, rels)
+    # keys far outside the cold domain, matched across both relations
+    relcache.append(rels["R"], {"x": np.int32([777]), "y": np.int32([888])})
+    relcache.append(rels["S"], {"y": np.int32([888]), "z": np.int32([999])})
+    got = compiled_free_join(q, rels, agg=None)
+    tuples = to_sorted_tuples(got, q.head)
+    assert (777, 888, 999) in tuples
+    assert tuples == to_sorted_tuples(_oracle(q, rels, None), q.head)
+
+
+# ---- incrementality counters ----------------------------------------------
+
+
+def test_append_is_one_delta_merge_zero_rebuilds(rng):
+    """The acceptance contract: a warm append costs one delta merge. The
+    trie cache's builds counter (every full StaticTrie construction routed
+    through the cache) must not move; delta_merges must."""
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 200, 9) for a in q.atoms}
+    want = _oracle(q, rels, "count")
+    assert compiled_free_join(q, rels, agg="count") == want  # cold: builds
+
+    for _ in range(3):
+        builds0, merges0 = TRIE_CACHE.builds, TRIE_CACHE.delta_merges
+        relcache.append(rels["R"], _delta(rng, rels["R"].schema, 40, 9))
+        got = compiled_free_join(q, rels, agg="count")
+        assert got == _oracle(q, rels, "count")
+        assert TRIE_CACHE.builds == builds0, "append must not trigger a full trie build"
+        assert TRIE_CACHE.delta_merges >= merges0 + 1
+
+
+def test_delete_is_tombstone_refresh_zero_rebuilds(rng):
+    """A delete (above the compaction threshold) refreshes cached weights
+    in place: no trie build, no delta merge, tombstone_refreshes moves."""
+    q = triangle_query()
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 200, 9) for a in q.atoms}
+    assert compiled_free_join(q, rels, agg="count") == _oracle(q, rels, "count")
+
+    builds0 = TRIE_CACHE.builds
+    merges0 = TRIE_CACHE.delta_merges
+    tomb0 = TRIE_CACHE.tombstone_refreshes
+    relcache.delete(rels["S"], np.arange(10))
+    assert compiled_free_join(q, rels, agg="count") == _oracle(q, rels, "count")
+    assert TRIE_CACHE.builds == builds0, "tombstone delete must not rebuild the trie"
+    assert TRIE_CACHE.delta_merges == merges0
+    assert TRIE_CACHE.tombstone_refreshes >= tomb0 + 1
+
+
+def test_auto_compaction_below_live_ratio(rng):
+    """Deleting past the live/total threshold triggers compaction: the
+    physical relation shrinks to its live rows and results still match."""
+    q = Query([Atom("R", ("x", "y")), Atom("S", ("y", "z"))])
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 100, 6) for a in q.atoms}
+    assert compiled_free_join(q, rels, agg="count") == _oracle(q, rels, "count")
+
+    rel = rels["R"]
+    relcache.delete(rel, np.arange(80))  # live/total = 0.2 < default 0.5
+    st = relcache.mutation_state(rel)
+    assert st is not None and st.compactions >= 1
+    assert rel.num_rows == 20, "compaction must drop dead rows physically"
+    assert len(next(iter(rel.columns.values()))) == 20
+    _check_parity(q, rels)
+
+
+# ---- shape stability -------------------------------------------------------
+
+
+def test_steady_state_appends_do_not_retrace(rng):
+    """Within one capacity bucket, repeated same-size appends reuse the
+    compiled merge program. Warmup is TWO appends (the first merge adopts
+    the unpadded cold trie, so its static signature differs); after that
+    the merge jit cache must stop growing."""
+    if not hasattr(_merge_append_jit, "_cache_size"):
+        pytest.skip("jax version without jit cache introspection")
+    q = Query([Atom("R", ("x", "y")), Atom("S", ("y", "z"))])
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, 300, 9) for a in q.atoms}
+    assert compiled_free_join(q, rels, agg="count") == _oracle(q, rels, "count")
+
+    def delta16():
+        # pin the delta's max key: the merge signature includes the delta's
+        # sort bit width, so a delta that happens to top out at a shorter
+        # key would retrace legitimately (fewer sort passes)
+        d = _delta(rng, rels["R"].schema, 16, 9)
+        return {v: np.concatenate([c[:-1], np.int32([8])]) for v, c in d.items()}
+
+    for _ in range(2):  # warmup: adoption merge + first steady-state merge
+        relcache.append(rels["R"], delta16())
+        compiled_free_join(q, rels, agg="count")
+    size0 = _merge_append_jit._cache_size()
+    for _ in range(4):
+        relcache.append(rels["R"], delta16())
+        assert compiled_free_join(q, rels, agg="count") == _oracle(q, rels, "count")
+    assert _merge_append_jit._cache_size() == size0, "steady-state append retraced the merge"
+
+
+# ---- mutation-state bookkeeping -------------------------------------------
+
+
+def test_live_relation_and_size_track_mutations(rng):
+    rel = rand_rel(rng, "R", ("x", "y"), 40, 5)
+    relcache.append(rel, {"x": np.int32([1, 2]), "y": np.int32([3, 4])})
+    assert relcache.live_size(rel) == 42
+    relcache.delete(rel, np.int32([0, 1]))
+    assert relcache.live_size(rel) == 40
+    live = relcache.live_relation(rel)
+    assert len(next(iter(live.columns.values()))) == 40
+    # snapshot is cached per version
+    assert relcache.live_relation(rel) is live

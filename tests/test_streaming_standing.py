@@ -1,0 +1,130 @@
+"""StandingQueryEngine: incremental maintenance over streaming ingest.
+
+The contract under test (PR 9 serving layer): a registered query's result
+tracks the eager oracle across ingests; a refresh with no mutations skips
+EVERY stage; an ingest into a relation only one stage reads leaves the
+other stages replaying cached device buffers (fingerprint skip); and two
+queries of one template share per-stage runners.
+"""
+import numpy as np
+
+from repro.core import free_join, relcache, to_sorted_tuples
+from repro.core.api import ExecOptions
+from repro.core.plan import BinaryPlan
+from repro.relational.relation import Relation
+from repro.relational.schema import Atom, Query
+from repro.serve import StandingQueryEngine
+from tests.conftest import rand_rel
+
+
+def chain4(rng, n=200, dom=12):
+    q = Query(
+        [Atom("R", ("a", "b")), Atom("S", ("b", "c")), Atom("T", ("c", "d")), Atom("U", ("d", "e"))]
+    )
+    rels = {a.alias: rand_rel(rng, a.alias, a.vars, n, dom) for a in q.atoms}
+    return q, rels
+
+
+def _oracle(q, rels, agg="count"):
+    live = {a: relcache.live_relation(r) for a, r in rels.items()}
+    return free_join(q, live, agg=agg)
+
+
+def _delta(rng, vars_, n, dom=12):
+    return {v: rng.integers(0, dom, n).astype(np.int32) for v in vars_}
+
+
+def test_standing_count_tracks_oracle_across_ingest(rng):
+    q, rels = chain4(rng)
+    eng = StandingQueryEngine(options=ExecOptions())
+    sq = eng.register(q, rels, agg="count")
+    assert sq.result == _oracle(q, rels)
+    for _ in range(3):
+        changed = eng.ingest(rels["U"], _delta(rng, ("d", "e"), 50))
+        assert sq in changed
+        assert sq.result == _oracle(q, rels)
+    relcache.delete(rels["R"], np.arange(20))
+    eng.refresh()
+    assert sq.result == _oracle(q, rels)
+
+
+def test_noop_refresh_skips_every_stage(rng):
+    q, rels = chain4(rng)
+    eng = StandingQueryEngine(options=ExecOptions())
+    sq = eng.register(q, rels, agg="count")
+    nstages = len(sq.states)
+    recomputed0, skipped0 = eng.stages_recomputed, eng.stages_skipped
+    assert eng.refresh() == []
+    assert eng.stages_recomputed == recomputed0, "no-op refresh must not recompute"
+    assert eng.stages_skipped == skipped0 + nstages
+    assert sq.result == _oracle(q, rels)
+
+
+def test_unchanged_stage_replays_cached_buffers(rng):
+    """Force a bushy two-stage plan: (R⋈S) ⋈ (T⋈U). Mutating only R must
+    leave the T⋈U stage skipped — its fingerprint (base column identity /
+    mutation version) did not move."""
+    q, rels = chain4(rng)
+    a = {at.alias: at for at in q.atoms}
+    tree = BinaryPlan(BinaryPlan(a["R"], a["S"]), BinaryPlan(a["T"], a["U"]))
+    eng = StandingQueryEngine(options=ExecOptions())
+    sq = eng.register(q, rels, agg="count", plan_tree=tree)
+    nstages = len(sq.states)
+    assert nstages >= 2
+    assert sq.result == _oracle(q, rels)
+
+    recomputed0, skipped0 = eng.stages_recomputed, eng.stages_skipped
+    eng.ingest(rels["R"], _delta(rng, ("a", "b"), 40))
+    assert sq.result == _oracle(q, rels)
+    recomputed = eng.stages_recomputed - recomputed0
+    skipped = eng.stages_skipped - skipped0
+    assert skipped >= 1, "the stage not reading R must replay its cached buffers"
+    assert recomputed < nstages
+    assert recomputed + skipped == nstages
+
+
+def test_materialized_standing_query(rng):
+    q, rels = chain4(rng, n=120)
+    eng = StandingQueryEngine(options=ExecOptions())
+    sq = eng.register(q, rels, agg=None)
+    assert to_sorted_tuples(sq.result, q.head) == to_sorted_tuples(_oracle(q, rels, None), q.head)
+    eng.ingest(rels["T"], _delta(rng, ("c", "d"), 30))
+    assert to_sorted_tuples(sq.result, q.head) == to_sorted_tuples(_oracle(q, rels, None), q.head)
+
+
+def test_cotemplate_queries_share_runners(rng):
+    """Two standing queries of the same shape share one per-stage runner
+    set (the template cache), and both stay correct across ingest."""
+    q, rels = chain4(rng, n=100)
+    eng = StandingQueryEngine(options=ExecOptions())
+    sq1 = eng.register(q, rels, agg="count")
+    sq2 = eng.register(q, rels, agg="count")
+    assert sq1.template.key == sq2.template.key
+    assert len(eng._runners) == 1
+    eng.ingest(rels["S"], _delta(rng, ("b", "c"), 40))
+    want = _oracle(q, rels)
+    assert sq1.result == want
+    assert sq2.result == want
+
+
+def test_filtered_standing_query(rng):
+    """Equality filters ride the template's lifted constants: two standing
+    queries differing only in the constant share runners and each tracks
+    its own filtered oracle."""
+    q = Query([Atom("R", ("a", "b")), Atom("S", ("b", "c"))])
+    rels = {at.alias: rand_rel(rng, at.alias, at.vars, 150, 6) for at in q.atoms}
+    eng = StandingQueryEngine(options=ExecOptions())
+    sqs = {k: eng.register(q, rels, filters={"a": k}, agg="count") for k in (1, 3)}
+    assert len(eng._runners) == 1
+
+    def oracle(k):
+        live = {a: relcache.live_relation(r) for a, r in rels.items()}
+        keep = live["R"].columns["a"] == k
+        fr = Relation("R", {v: c[keep] for v, c in live["R"].columns.items()})
+        return free_join(q, {"R": fr, "S": live["S"]}, agg="count")
+
+    for k, sq in sqs.items():
+        assert sq.result == oracle(k)
+    eng.ingest(rels["R"], _delta(rng, ("a", "b"), 60, dom=6))
+    for k, sq in sqs.items():
+        assert sq.result == oracle(k)
