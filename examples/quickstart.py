@@ -198,6 +198,28 @@ def main():
         print(f"  x={c:>2}: count={r.result}")
     print(f"4 tenants, {eng.dispatches} batched dispatch ({(t1 - t0) * 1e3:.1f} ms incl. compile)")
 
+    # resilience: a fault the quota machinery has no protocol for — here an
+    # injected XLA compile failure, in production a device OOM or a
+    # memory-governor shed — never crashes step(). The group descends a
+    # degradation ladder (full-width batch -> halved batch -> unbatched ->
+    # eager host engine) and every admitted request still answers
+    # correctly, with the rung recorded on the handle as `degraded_to`.
+    from repro.core import faults
+
+    print("\nresilience (degradation ladder under an injected compile failure)")
+    reng = JoinServeEngine(slots=2)
+    with faults.inject("compile_fail", times=1) as f:
+        r0 = reng.submit(q, rels, {"x": 3}, tenant="tenantA")
+        r1 = reng.submit(q, rels, {"x": 17}, tenant="tenantB")
+        reng.run()
+    for r, c in zip((r0, r1), (3, 17)):
+        assert r.done and r.error is None
+        assert r.result == free_join(q, rels, agg="count", filters={"x": c})
+    print(f"  compile faults injected: {f.fired}; absorbed: {reng.faults_absorbed}")
+    print(f"  x= 3: count={r0.result}  (degraded_to={r0.degraded_to})")
+    print(f"  x=17: count={r1.result}  (degraded_to={r1.degraded_to})")
+    print("  both answers correct — the query survived the failed compile")
+
     # streaming ingest + standing queries: relations mutate through the
     # relcache delta API (append/delete), and the cached trie absorbs each
     # batch with ONE delta merge — the batch is sorted alone and spliced

@@ -2,6 +2,7 @@
 # contribution. Plans (binary2fj + factor), COLT tries, the vectorized
 # Free Join engine, baselines, optimizer, the capacity-planned compiled
 # path, and the distributed engine.
+from repro.core import faults, membudget
 from repro.core.api import (
     ExecOptions,
     binary_join,
@@ -43,6 +44,8 @@ from repro.core.plan import (
 
 __all__ = [
     "AdaptiveExecutor",
+    "faults",
+    "membudget",
     "CapacityPlan",
     "CapacityQuotaError",
     "ChainCapacityPlan",

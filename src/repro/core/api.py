@@ -27,7 +27,7 @@ from dataclasses import dataclass, fields, replace
 
 import numpy as np
 
-from repro.core import engine, relcache
+from repro.core import engine, faults, membudget, relcache
 from repro.core.plan import (
     BinaryPlan,
     FreeJoinPlan,
@@ -243,6 +243,35 @@ def free_join(
 _runner_cache = relcache.KeyedCache(max_entries=32)
 
 
+def _govern_runner(cache, key, runner) -> None:
+    """Register a freshly-cached runner with the device-memory governor,
+    costed at its frontier footprint. The governor may LRU-evict it later
+    (the callback drops the cache entry; an identical query then re-plans),
+    and the cache's own eviction paths release the governor entry through
+    KeyedCache.on_evict — the two stores can never disagree. A shed (the
+    runner alone cannot fit the budget) un-caches it: the current call
+    still runs, nothing ungoverned is kept warm."""
+    if isinstance(cache, relcache.ScopedCache):
+        root, fkey = cache._parent, (cache._tag, key)
+    else:
+        root, fkey = cache, key
+    if root.on_evict is None:
+        root.on_evict = lambda k, _v, _root=root: membudget.GOVERNOR.release(
+            ("runner", id(_root), k)
+        )
+    token = ("runner", id(root), fkey)
+    try:
+        membudget.GOVERNOR.account(
+            token,
+            runner.frontier_nbytes(),
+            evict=lambda _root=root, _k=fkey: _root._evict(_k),
+        )
+    except membudget.MemoryBudgetError:
+        root._evict(fkey)
+        return
+    runner._govern_token = token
+
+
 def _runner_key(stages, rels, base, agg, options, filter_vars, batch, max_capacity):
     return (
         # str(plan) renders the nodes but not the output projection, and
@@ -375,6 +404,7 @@ def _acquire_runner(
         )
         if cacheable:
             cache.put(key, runner, [rels[a] for a in base])
+            _govern_runner(cache, key, runner)
     return runner, rels, cacheable, plan_tree
 
 
@@ -445,7 +475,26 @@ def compiled_free_join(
     # the hybrid baseline's stage relations are fresh every call — skip the
     # trie cache entirely there (in-graph builds ARE its per-call cost;
     # caching would only insert dead-on-arrival entries)
-    out = runner.run_relations(rels, reuse_tries=cacheable, filter_consts=consts)
+    degraded = None
+    try:
+        out = runner.run_relations(rels, reuse_tries=cacheable, filter_consts=consts)
+    except Exception as e:
+        # the degradation ladder's bottom rung for the standalone surface:
+        # compile failure, device OOM, or a governor shed answers eagerly
+        # on the host instead of raising — the result contract (count /
+        # (bound, mult)) is the eager engine's own
+        if not faults.recoverable(e):
+            raise
+        warnings.warn(
+            f"compiled path degraded to eager free_join after "
+            f"{type(e).__name__}: {e}",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        degraded = f"{type(e).__name__}: {e}"
+        tree = chosen_tree if isinstance(chosen_tree, BinaryPlan) else None
+        live = {a: relcache.live_relation(r) for a, r in relations.items()}
+        out = free_join(query, live, tree, agg=agg, filters=filters or None)
     if info is not None:
         info.update(
             runner=runner,
@@ -455,6 +504,8 @@ def compiled_free_join(
             options=opts,
             plan_tree=chosen_tree,
         )
+        if degraded is not None:
+            info.update(degraded_to="eager", degraded_from=degraded)
     return out
 
 

@@ -108,7 +108,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import relcache
+from repro.core import faults, membudget, relcache
 from repro.core.plan import FreeJoinPlan
 from repro.kernels import ops
 
@@ -705,7 +705,9 @@ class TrieCache:
             and entry.get("version") is None
             and all(entry["cols"][v] is used[v] for v in flat)
         ):
-            return self._serve(entry["trie"], lops, budget, count_hit=True)
+            view = self._serve(entry["trie"], lops, budget, count_hit=True)
+            self._govern(rel, ns, key)
+            return view
         # miss: build, seeding the sort with any prefix-compatible cached
         # order over the same (identical) columns
         key_bits = self._key_bits(rel, flat)
@@ -730,7 +732,30 @@ class TrieCache:
         self.builds += 1
         if presorted:
             self.order_shares += 1
+        self._govern(rel, ns, key)
         return trie.table_view(lops.probed)
+
+    def _govern(self, rel, ns, key) -> None:
+        """Account the cached entry's device bytes with the memory
+        governor (an LRU touch on every serve, a resize when lazy tables
+        or delta merges changed the footprint). If the governor sheds —
+        this trie alone cannot fit the budget even after evicting every
+        cold entry — the entry is dropped and the trie serves this one
+        call uncached, keeping the governed-bytes invariant intact."""
+        entry = ns.get(key)
+        if entry is None:
+            return
+        token = ("trie", id(rel), key)
+        try:
+            membudget.GOVERNOR.account(
+                token,
+                membudget.trie_nbytes(entry["trie"]),
+                evict=lambda _ns=ns, _k=key: _ns.pop(_k, None),
+                owner=rel,
+            )
+        except membudget.MemoryBudgetError:
+            ns.pop(key, None)
+            membudget.GOVERNOR.release(token)
 
     def _serve(self, trie: StaticTrie, lops, budget, *, count_hit: bool):
         """Fill any probe tables the request needs that the cached build
@@ -774,7 +799,9 @@ class TrieCache:
         if entry is not None:
             trie = entry["trie"]
             if not deltas:
-                return self._serve(trie, lops, budget, count_hit=True)
+                view = self._serve(trie, lops, budget, count_hit=True)
+                self._govern(rel, ns, key)
+                return view
             for _ver, kind, payload in deltas:
                 if kind == "append":
                     merged = self._merge_append(
@@ -793,7 +820,9 @@ class TrieCache:
                 entry["trie"] = trie
                 entry["cols"] = dict(trie.cols)
                 entry["version"] = st.version
-                return self._serve(trie, lops, budget, count_hit=False)
+                view = self._serve(trie, lops, budget, count_hit=False)
+                self._govern(rel, ns, key)
+                return view
         # full rebuild, padded to the bucket and weighted by the liveness
         # mask, so later appends merge and later deletes retire in place
         cap = _bucket(st.total)
@@ -817,7 +846,9 @@ class TrieCache:
             "n_real": st.total,
         }
         self.builds += 1
-        return self._serve(trie, lops, budget, count_hit=False)
+        view = self._serve(trie, lops, budget, count_hit=False)
+        self._govern(rel, ns, key)
+        return view
 
     def _merge_append(self, trie, n_real, payload, lops, impl, budget):
         """Host wrapper for one append log entry: delta key widths, bucket
@@ -1373,6 +1404,10 @@ class AdaptiveExecutor:
         self.reshapes = 0  # tightening re-runs across calls
         self.calls = 0  # top-level call chains issued (retries excluded)
         self._cache: dict[tuple, object] = {}
+        # memory-governor token, set by api._govern_runner when this runner
+        # is cached: growth re-accounts against the budget and sheds
+        # (MemoryBudgetError -> the serving ladder) instead of allocating
+        self._govern_token = None
         self._last_needs = None  # per-stage measured expansion needs (lane counts)
         self._feedback_specs = None  # lazily-derived per-node prefix specs
         # base alias -> its level layout (for cross-call trie reuse); an
@@ -1399,9 +1434,24 @@ class AdaptiveExecutor:
             return cp
         return ChainCapacityPlan(names=tuple(n for n, _ in self.stages), stages=(cp,))
 
+    def frontier_nbytes(self, cap_plan=None) -> int:
+        """Accounting model of this runner's frontier footprint: per stage,
+        cells x 4 bytes x (bound vars + valid + mult), plus per-lane mask
+        columns for batched (mask-mode) runners. The governor's currency
+        for runner-cache entries and adaptive growth."""
+        chain = self._as_chain(self.cap_plan if cap_plan is None else cap_plan)
+        total = 0
+        for (_name, p), cp in zip(self.stages, chain.stages):
+            width = len(tuple(p.query.variables)) + 2
+            total += cp.cells() * 4 * width
+            if self.batch:
+                total += cp.cells() * 4 * self.batch
+        return total
+
     def _fn(self, chain):
         key = chain.key()
         if key not in self._cache:
+            faults.fire("compile")
             fn = make_chain_executor(
                 self.stages,
                 chain.stages,
@@ -1469,8 +1519,10 @@ class AdaptiveExecutor:
         chain = self._as_chain(self.cap_plan)
         self.calls += 1
         tightened = False
+        faults.fire("overflow", batch=self.batch, max_capacity=self.max_capacity)
         for _ in range(self.max_retries + 1):
             fn = self._fn(chain)
+            faults.fire("dispatch")
             out = fn(rel_data, filter_consts) if self.filter_vars else fn(rel_data)
             # ONE explicit d2h for the control plane: the per-stage need
             # vectors drive host-side overflow/tighten decisions. Results
@@ -1486,6 +1538,13 @@ class AdaptiveExecutor:
                     self._check_quota(chain, s, int(i), int(ne[i]), np.asarray(ne_l))
                     grown = grown.grow_to(s, int(i), int(ne[i]))
             if grown is not chain:
+                if self._govern_token is not None:
+                    # growth must fit the device-memory budget: a shed here
+                    # raises MemoryBudgetError into the degradation ladder
+                    # instead of growing past what the device can hold
+                    membudget.GOVERNOR.account(
+                        self._govern_token, self.frontier_nbytes(grown)
+                    )
                 chain = grown
                 self.retries += 1
                 continue
@@ -1512,6 +1571,10 @@ class AdaptiveExecutor:
                     continue
             # steady state: keep the grown/tightened plan
             self.cap_plan = chain.stages[0] if self._single else chain
+            if self._govern_token is not None:
+                membudget.GOVERNOR.account(
+                    self._govern_token, self.frontier_nbytes(chain)
+                )
             # stash the measured per-node expansion needs: exact frontier
             # lane counts, the optimizer's measured-cardinality feedback
             self._last_needs = tuple(self._reduced(ne) for ne in needs_e)

@@ -50,6 +50,7 @@ delta-build contract that replaced rebuild-on-any-change:
 """
 from __future__ import annotations
 
+import warnings
 import weakref
 from collections import OrderedDict
 
@@ -101,6 +102,11 @@ class KeyedCache:
     the same bounded store, so independent keying disciplines (verbatim
     runner keys vs canonicalized template keys) can share one cache without
     ever colliding.
+
+    `on_evict`, if set, is called as `on_evict(key, value)` on EVERY path
+    an entry leaves the cache — put-replacement, LRU overflow, finalizer
+    eviction, explicit _evict, clear — so external accounting (the device-
+    memory governor) can never go stale against the cache's contents.
     """
 
     def __init__(self, max_entries: int = 64):
@@ -108,6 +114,7 @@ class KeyedCache:
         self._data: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.on_evict = None  # callable (key, value), see class docstring
 
     def get(self, key):
         hit = self._data.get(key)
@@ -126,26 +133,34 @@ class KeyedCache:
         if old is not None:
             for fin in old[1]:
                 fin.detach()
+            if self.on_evict is not None and old[0] is not value:
+                self.on_evict(key, old[0])
         fins = tuple(weakref.finalize(r, self._evict, key) for r in rels)
         self._data[key] = (value, fins)
         while len(self._data) > self.max_entries:
-            _k, (_v, evicted_fins) = self._data.popitem(last=False)
+            k, (v, evicted_fins) = self._data.popitem(last=False)
             for fin in evicted_fins:
                 fin.detach()
+            if self.on_evict is not None:
+                self.on_evict(k, v)
 
     def _evict(self, key) -> None:
         entry = self._data.pop(key, None)
         if entry is not None:
             for fin in entry[1]:
                 fin.detach()
+            if self.on_evict is not None:
+                self.on_evict(key, entry[0])
 
     def __len__(self) -> int:
         return len(self._data)
 
     def clear(self) -> None:
-        for _k, (_v, fins) in self._data.items():
+        for k, (v, fins) in self._data.items():
             for fin in fins:
                 fin.detach()
+            if self.on_evict is not None:
+                self.on_evict(k, v)
         self._data.clear()
 
 
@@ -313,6 +328,41 @@ class MutationState:
             self.base_version = self.log.pop(0)[0]
 
 
+# Out-of-band mutation observability: a column replaced behind the delta
+# API is handled correctly (the stale state abdicates and identity-keyed
+# caches fully rebuild) but that fallback used to be silent — a workload
+# quietly paying rebuild-per-query looked identical to a healthy one.
+# Every detection now bumps a counter and the first one warns.
+_OOB = {"swaps": 0, "warned": False}
+
+
+def oob_swaps() -> int:
+    """Process-lifetime count of out-of-band column swaps detected on
+    mutating relations (each one dropped a delta log and forced cached
+    tries to fully rebuild)."""
+    return _OOB["swaps"]
+
+
+def reset_oob_warning() -> None:
+    """Re-arm the one-shot out-of-band-swap warning (tests)."""
+    _OOB["warned"] = False
+
+
+def _note_oob(rel) -> None:
+    _OOB["swaps"] += 1
+    if not _OOB["warned"]:
+        _OOB["warned"] = True
+        warnings.warn(
+            f"out-of-band column swap detected on mutating relation "
+            f"{rel.name!r}: its delta log was dropped and cached tries will "
+            "fully rebuild. Mutate through relcache.append/delete/compact to "
+            "keep delta merges. (Warned once per process; "
+            "relcache.oob_swaps() counts every detection.)",
+            RuntimeWarning,
+            stacklevel=4,
+        )
+
+
 def mutation_state(rel) -> MutationState | None:
     """The relation's mutation state, or None if it was never mutated
     through this API (or was mutated out-of-band, which drops the stale
@@ -321,6 +371,7 @@ def mutation_state(rel) -> MutationState | None:
     st = ns.get("state")
     if st is not None and not st.validate(rel):
         del ns["state"]
+        _note_oob(rel)
         return None
     return st
 
@@ -329,6 +380,8 @@ def _state_of(rel) -> MutationState:
     ns = REGISTRY.namespace(rel, "mutation")
     st = ns.get("state")
     if st is None or not st.validate(rel):
+        if st is not None:
+            _note_oob(rel)
         st = MutationState(rel)
         ns["state"] = st
     return st

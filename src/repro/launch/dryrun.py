@@ -31,6 +31,7 @@ os.environ["XLA_FLAGS"] = (
 import argparse  # noqa: E402
 import dataclasses  # noqa: E402
 import json  # noqa: E402
+import logging  # noqa: E402
 import re  # noqa: E402
 import time  # noqa: E402
 
@@ -139,8 +140,14 @@ def _cost(compiled) -> dict:
 def _memory(compiled) -> dict:
     try:
         ma = compiled.memory_analysis()
-    except Exception:
-        return {}
+    except Exception as e:
+        # a backend with no memory analysis is a real signal (the fit proof
+        # never happened) — log it and carry it into the dry-run record
+        # instead of silently reporting an empty footprint
+        logging.getLogger(__name__).warning(
+            "memory_analysis failed: %s: %s", type(e).__name__, e
+        )
+        return {"error": f"{type(e).__name__}: {e}"}
     if ma is None:
         return {}
     keys = [

@@ -19,12 +19,17 @@ a bounded, attributable rejection, at four layers:
    `core.capacity.CapacityQuotaError` naming the offending batch lane —
    the engine evicts that one request and re-dispatches the rest against
    the *existing* compiled executor (no recompile).
-3. **retry budget** (`max_retries`): eviction rounds per dispatch are
-   bounded, so even adversarial batches terminate.
+3. **retry budget** (`max_retries`): eviction rounds are charged to the
+   tenant that caused them — once a tenant's evictions in one group
+   exceed its own max_retries, its remaining queued requests are
+   rejected wholesale. Compliant co-batched tenants never pay: each
+   eviction strictly shrinks the batch, so the dispatch loop terminates
+   without ever spending an innocent tenant's budget.
 
 Quotas are per-tenant (`AdmissionController.quota`), falling back to a
-default; counters (`admitted`/`rejected`) are the observable contract the
-serving tests and benchmark lock.
+default; counters (`admitted`/`rejected`, and the per-tenant
+`rejected_by`/`rejected_reasons` breakdowns) are the observable contract
+the serving tests and benchmark lock.
 """
 from __future__ import annotations
 
@@ -76,9 +81,18 @@ class AdmissionController:
         self.per_tenant = dict(per_tenant or {})
         self.admitted = 0
         self.rejected = 0
+        # attribution: which tenant was rejected, and why — the isolation
+        # tests assert an eviction storm charges only its offender
+        self.rejected_by: dict[str, int] = {}
+        self.rejected_reasons: dict[str, int] = {}
 
     def quota(self, tenant: str) -> QueryQuota:
         return self.per_tenant.get(tenant, self.default)
+
+    def _count_reject(self, tenant: str, reason: str) -> None:
+        self.rejected += 1
+        self.rejected_by[tenant] = self.rejected_by.get(tenant, 0) + 1
+        self.rejected_reasons[reason] = self.rejected_reasons.get(reason, 0) + 1
 
     def check_plan(self, tenant: str, plan_cells: int) -> None:
         """Pre-compile admission: reject if the planned buffer footprint
@@ -86,7 +100,7 @@ class AdmissionController:
         the rejection); otherwise counts an admission."""
         q = self.quota(tenant)
         if q.max_plan_cells is not None and plan_cells > q.max_plan_cells:
-            self.rejected += 1
+            self._count_reject(tenant, "plan_cells")
             raise AdmissionError(
                 f"plan footprint {plan_cells} cells exceeds tenant {tenant!r} "
                 f"quota of {q.max_plan_cells}",
@@ -106,7 +120,7 @@ class AdmissionController:
             and measured_us is not None
             and measured_us > q.max_dispatch_us
         ):
-            self.rejected += 1
+            self._count_reject(tenant, "measured_cost")
             raise AdmissionError(
                 f"measured dispatch cost {measured_us:.0f}us exceeds tenant "
                 f"{tenant!r} quota of {q.max_dispatch_us:.0f}us",
@@ -114,7 +128,8 @@ class AdmissionController:
                 reason="measured_cost",
             )
 
-    def reject_runtime(self, tenant: str) -> None:
-        """Count a runtime (growth-quota) eviction. The raise site is the
-        adaptive runner; the engine calls this when it evicts the lane."""
-        self.rejected += 1
+    def reject_runtime(self, tenant: str, reason: str = "quota") -> None:
+        """Count a runtime rejection — a growth-quota eviction (the raise
+        site is the adaptive runner; the engine calls this when it evicts
+        the lane), an exhausted retry budget, or a missed deadline."""
+        self._count_reject(tenant, reason)

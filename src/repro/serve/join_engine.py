@@ -40,18 +40,40 @@ measured dispatch wall time (`cost_ema_us`, updated on every dispatch —
 cold compiles included, decayed by later warm dispatches). Admission
 consults it alongside the planned cells: planning says what a template
 *should* cost, the EMA says what it *did* cost last time(s).
+
+**Resilience (the degradation ladder).** A fault the quota machinery has
+no protocol for — a compile failure, device RESOURCE_EXHAUSTED, a
+memory-governor shed (core.membudget) — never crashes step(). The group
+descends a ladder instead, each rung recorded on the served handles as
+`degraded_to`:
+
+    full-width batch -> halved batch -> unbatched kill-mode -> eager host
+
+The eager rung cannot fail for device reasons (it is the numpy engine),
+so every admitted request completes — possibly degraded, never crashed.
+Two more production guards ride along: per-request `deadline_ms`
+(submit-relative; expired requests are rejected with reason "deadline"
+rather than dispatched late) and jittered exponential backoff between
+quota-eviction rounds, so an overflow storm cannot hot-loop the host
+while co-batched tenants wait. Eviction retry budgets are charged to the
+OFFENDER: a tenant whose lanes keep blowing the growth quota exhausts
+its own max_retries and is rejected wholesale; compliant neighbors are
+re-dispatched free of charge (the batch strictly shrinks, so the loop
+terminates structurally).
 """
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 from collections import deque
 
 import numpy as np
 
-from repro.core import api
-from repro.core.api import ExecOptions, _acquire_runner
+from repro.core import api, faults, relcache
+from repro.core.api import ExecOptions, _acquire_runner, free_join
 from repro.core.capacity import CapacityQuotaError
+from repro.core.plan import BinaryPlan
 from repro.relational.relation import Relation
 from repro.relational.schema import Query
 from repro.serve.admission import AdmissionController, AdmissionError
@@ -67,6 +89,13 @@ class JoinRequest:
     result: object = None
     error: Exception | None = None
     done: bool = False
+    # which ladder rung served this request, if any ("halved" | "unbatched"
+    # | "eager"); None means the full-width fast path answered it
+    degraded_to: str | None = None
+    # submit-relative deadline: past it the request is rejected (reason
+    # "deadline") instead of dispatched late
+    deadline_ms: float | None = None
+    t_submit: float = 0.0
 
 
 class JoinServeEngine:
@@ -105,6 +134,18 @@ class JoinServeEngine:
         # dispatches.
         self.cost_ema_us: dict = {}
         self.ema_alpha = 0.3
+        # resilience counters: requests served per ladder rung, faults the
+        # ladder absorbed, deadline rejections — the chaos suite's contract
+        self.degraded = {"halved": 0, "unbatched": 0, "eager": 0}
+        self.faults_absorbed = 0
+        self.deadline_rejected = 0
+        # jittered exponential backoff between quota-eviction rounds: base
+        # doubles per eviction up to the cap, jitter is deterministic
+        # (seeded) so chaos runs reproduce
+        self.backoff_base_ms = 1.0
+        self.backoff_cap_ms = 50.0
+        self.backoff_jitter = 0.25
+        self._jitter_rng = random.Random(0xC0FFEE)
 
     # ---- intake -------------------------------------------------------
     def submit(
@@ -116,6 +157,7 @@ class JoinServeEngine:
         tenant: str = "default",
         agg: str | None = "count",
         plan_tree=None,
+        deadline_ms: float | None = None,
     ) -> JoinRequest:
         """Canonicalize, statically verify, and enqueue one query; returns
         its JoinRequest handle (result/error/done are filled by step()).
@@ -146,10 +188,13 @@ class JoinServeEngine:
                 template=None, consts=np.zeros(0, np.int32),  # type: ignore[arg-type]
             )
             self._next_rid += 1
-            self.admission.reject_runtime(tenant)
+            self.admission.reject_runtime(tenant, reason="invalid")
             self._reject(req, e)
             return req
-        req = JoinRequest(rid=self._next_rid, tenant=tenant, template=template, consts=consts)
+        req = JoinRequest(
+            rid=self._next_rid, tenant=tenant, template=template, consts=consts,
+            deadline_ms=deadline_ms, t_submit=time.perf_counter(),
+        )
         self._next_rid += 1
         self.queue.append(req)
         return req
@@ -206,9 +251,40 @@ class JoinServeEngine:
             dt_us if ema is None else (1 - self.ema_alpha) * ema + self.ema_alpha * dt_us
         )
 
-    def _serve_group(self, template: PlanTemplate, group: list[JoinRequest]) -> None:
-        t = template
-        batch = self.slots if t.filter_vars else None
+    def _reap_deadlines(self, reqs: list[JoinRequest]) -> None:
+        """Reject (reason "deadline") every live request past its
+        submit-relative deadline — called before each dispatch round, so a
+        request stuck behind a slow neighbor is refused, not served late."""
+        now = time.perf_counter()
+        for r in reqs:
+            if r.done or r.deadline_ms is None:
+                continue
+            waited_ms = (now - r.t_submit) * 1e3
+            if waited_ms > r.deadline_ms:
+                self.deadline_rejected += 1
+                self.admission.reject_runtime(r.tenant, reason="deadline")
+                self._reject(
+                    r,
+                    AdmissionError(
+                        f"deadline {r.deadline_ms:.0f}ms exceeded "
+                        f"({waited_ms:.0f}ms queued)",
+                        tenant=r.tenant,
+                        reason="deadline",
+                    ),
+                )
+
+    def _backoff(self, evictions: int) -> None:
+        """Jittered exponential backoff between quota-eviction rounds: an
+        overflow storm re-dispatches at a decaying rate instead of
+        hot-looping the host. Deterministically seeded; set
+        backoff_base_ms=0 to disable."""
+        if self.backoff_base_ms <= 0:
+            return
+        delay = min(self.backoff_cap_ms, self.backoff_base_ms * (2 ** (evictions - 1)))
+        delay *= 1.0 + self.backoff_jitter * self._jitter_rng.random()
+        time.sleep(delay / 1e3)
+
+    def _acquire(self, t: PlanTemplate, *, batch, group):
         runner, rels, _, _ = _acquire_runner(
             t.query,
             t.relations,
@@ -220,12 +296,14 @@ class JoinServeEngine:
             max_capacity=self._group_capacity_quota(group),
             cache=self._cache,
         )
-        # pre-compile admission: measured cost first (a cost rejection must
-        # not count as admitted), then the planned-cells check — the
-        # capacity plan exists, the executor does not yet, so either
-        # violation costs zero XLA work
+        return runner, rels
+
+    def _admit(self, t: PlanTemplate, group, cells: int) -> list[JoinRequest]:
+        """Pre-compile admission: measured cost first (a cost rejection
+        must not count as admitted), then the planned-cells check — the
+        capacity plan exists, the executor does not yet, so either
+        violation costs zero XLA work."""
         live: list[JoinRequest] = []
-        cells = runner.cap_plan.cells()
         ema = self.cost_ema_us.get(t.key)
         for req in group:
             try:
@@ -235,22 +313,64 @@ class JoinServeEngine:
                 self._reject(req, e)
             else:
                 live.append(req)
-        if not live:
+        return live
+
+    def _serve_group(self, template: PlanTemplate, group: list[JoinRequest]) -> None:
+        t = template
+        self._reap_deadlines(group)
+        group = [r for r in group if not r.done]
+        if not group:
             return
-        if not t.filter_vars:
-            # nothing varies per lane: one unbatched call answers everyone
-            t0 = time.perf_counter()
-            out = runner.run_relations(rels, reuse_tries=True)
-            self._observe_cost(t.key, (time.perf_counter() - t0) * 1e6)
-            self.dispatches += 1
-            for req in live:
-                req.result, req.done = out, True
-                self.served += 1
-            return
-        retries = max(self.admission.quota(r.tenant).max_retries for r in live)
-        for _round in range(retries + 1):
-            consts = np.broadcast_to(live[0].consts, (self.slots, len(t.filter_vars))).copy()
-            for i, req in enumerate(live):
+        live: list[JoinRequest] | None = None
+        try:
+            batch = self.slots if t.filter_vars else None
+            runner, rels = self._acquire(t, batch=batch, group=group)
+            live = self._admit(t, group, runner.cap_plan.cells())
+            if not live:
+                return
+            if not t.filter_vars:
+                self._dispatch_filterless(t, runner, rels, live)
+            else:
+                self._dispatch_batched(t, runner, rels, live, self.slots)
+        except Exception as e:
+            if not faults.recoverable(e):
+                raise
+            pending = [r for r in (group if live is None else live) if not r.done]
+            if live is None:
+                # the fault struck before admission (acquire/compile): the
+                # cells check needs a capacity plan that never materialized,
+                # so admit on the cost quota alone before degrading
+                pending = self._admit(t, pending, 0)
+            self.faults_absorbed += 1
+            self._degrade(t, pending, e)
+
+    def _dispatch_filterless(self, t, runner, rels, live) -> None:
+        # nothing varies per lane: one unbatched call answers everyone
+        t0 = time.perf_counter()
+        out = runner.run_relations(rels, reuse_tries=True)
+        self._observe_cost(t.key, (time.perf_counter() - t0) * 1e6)
+        self.dispatches += 1
+        for req in live:
+            req.result, req.done = out, True
+            self.served += 1
+
+    def _dispatch_batched(self, t, runner, rels, live, width: int, label=None) -> None:
+        """Serve `live` in chunks of `width` lanes (one vmapped dispatch
+        each). CapacityQuotaError evicts the named lane, charges the
+        OFFENDER's retry budget, backs off, and re-dispatches the rest
+        against the same compiled executor; the pending set strictly
+        shrinks every round, so the loop terminates structurally."""
+        evictions = 0
+        evicted_by: dict[str, int] = {}
+        pending = [r for r in live if not r.done]
+        while pending:
+            self._reap_deadlines(pending)
+            pending = [r for r in pending if not r.done]
+            if not pending:
+                return
+            lanes = pending[:width]
+            consts = np.broadcast_to(lanes[0].consts, (width, len(t.filter_vars))).copy()
+            for i, req in enumerate(lanes):
                 consts[i] = req.consts  # dead slots keep lane 0's constants
             t0 = time.perf_counter()
             try:
@@ -258,31 +378,105 @@ class JoinServeEngine:
             except CapacityQuotaError as e:
                 self._observe_cost(t.key, (time.perf_counter() - t0) * 1e6)
                 self.dispatches += 1
-                victim = live[e.lane] if e.lane is not None and e.lane < len(live) else live[0]
+                victim = (
+                    lanes[e.lane]
+                    if e.lane is not None and e.lane < len(lanes)
+                    else lanes[0]
+                )
                 self.admission.reject_runtime(victim.tenant)
                 self._reject(victim, e)
-                live = [r for r in live if r is not victim]
-                if not live:
-                    return
+                pending.remove(victim)
+                # the retry budget is the offender's: its max_retries bounds
+                # how many eviction rounds ITS lanes may cause in this
+                # group; past that, its remaining requests go wholesale
+                n = evicted_by.get(victim.tenant, 0) + 1
+                evicted_by[victim.tenant] = n
+                if n > self.admission.quota(victim.tenant).max_retries:
+                    for r in [p for p in pending if p.tenant == victim.tenant]:
+                        self.admission.reject_runtime(r.tenant, reason="retries")
+                        self._reject(
+                            r,
+                            AdmissionError(
+                                "retry budget exhausted by repeated quota "
+                                "evictions",
+                                tenant=r.tenant,
+                                reason="retries",
+                            ),
+                        )
+                        pending.remove(r)
+                evictions += 1
+                self._backoff(evictions)
                 continue
             self._observe_cost(t.key, (time.perf_counter() - t0) * 1e6)
             self.dispatches += 1
-            for i, req in enumerate(live):
+            for i, req in enumerate(lanes):
                 req.result = int(out[i]) if t.agg == "count" else out[i]
                 req.done = True
+                req.degraded_to = label
                 self.served += 1
-            return
-        # retry budget exhausted: reject whatever is still unserved
-        for req in live:
-            self.admission.reject_runtime(req.tenant)
-            self._reject(
-                req,
-                AdmissionError(
-                    "retry budget exhausted for batched dispatch",
-                    tenant=req.tenant,
-                    reason="retries",
-                ),
-            )
+                if label is not None:
+                    self.degraded[label] += 1
+            pending = [r for r in pending if not r.done]
+
+    def _degrade(self, t, pending: list[JoinRequest], cause: Exception) -> None:
+        """Walk the remaining ladder rungs for requests a recoverable fault
+        left unserved: halved batch width (a fresh, narrower compile) ->
+        unbatched kill-mode -> eager host fallback. The eager rung cannot
+        fail for device reasons, so every request completes."""
+        half = self.slots // 2
+        if t.filter_vars and half >= 1 and pending:
+            try:
+                runner, rels = self._acquire(t, batch=half, group=pending)
+                self._dispatch_batched(t, runner, rels, pending, half, label="halved")
+            except Exception as e:
+                if not faults.recoverable(e):
+                    raise
+                self.faults_absorbed += 1
+            pending = [r for r in pending if not r.done]
+        if t.filter_vars and pending:
+            try:
+                runner, rels = self._acquire(t, batch=None, group=pending)
+                for req in list(pending):
+                    if req.done:
+                        continue
+                    t0 = time.perf_counter()
+                    try:
+                        out = runner.run_relations(
+                            rels, reuse_tries=True, filter_consts=req.consts
+                        )
+                    except CapacityQuotaError as e:
+                        self.admission.reject_runtime(req.tenant)
+                        self._reject(req, e)
+                        continue
+                    self._observe_cost(t.key, (time.perf_counter() - t0) * 1e6)
+                    self.dispatches += 1
+                    req.result = int(out) if t.agg == "count" else out
+                    req.done = True
+                    req.degraded_to = "unbatched"
+                    self.served += 1
+                    self.degraded["unbatched"] += 1
+            except Exception as e:
+                if not faults.recoverable(e):
+                    raise
+                self.faults_absorbed += 1
+            pending = [r for r in pending if not r.done]
+        for req in pending:
+            if not req.done:
+                self._serve_eager(t, req)
+
+    def _serve_eager(self, t, req: JoinRequest) -> None:
+        """Ladder bottom: answer one request on the eager host engine over
+        live-row snapshots. agg=None results follow the eager contract
+        ((bound, mult)) rather than the compiled one."""
+        filters = {v: int(c) for v, c in zip(t.filter_vars, req.consts)}
+        tree = t.plan_tree if isinstance(t.plan_tree, BinaryPlan) else None
+        rels = {a: relcache.live_relation(r) for a, r in t.relations.items()}
+        out = free_join(t.query, rels, tree, agg=t.agg, filters=filters or None)
+        req.result = int(out) if t.agg == "count" else out
+        req.done = True
+        req.degraded_to = "eager"
+        self.served += 1
+        self.degraded["eager"] += 1
 
     def _group_capacity_quota(self, group: list[JoinRequest]) -> int | None:
         """The runtime growth quota armed on the group's runner: the max of

@@ -37,9 +37,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import relcache
-from repro.core.api import ExecOptions, _stage_plans
-from repro.core.capacity import plan_chain_capacities
+from repro.core import faults, relcache
+from repro.core.api import ExecOptions, _stage_plans, free_join
+from repro.core.capacity import CapacityQuotaError, plan_chain_capacities
 from repro.core.compiled import (
     PAD_KEY,
     TRIE_CACHE,
@@ -49,6 +49,7 @@ from repro.core.compiled import (
     materialize_compiled,
 )
 from repro.core.optimizer import JoinOrderOptimizer, Stats
+from repro.core.plan import BinaryPlan
 from repro.relational.relation import Relation
 from repro.relational.schema import Query
 from repro.serve.templates import PlanTemplate, canonicalize
@@ -101,6 +102,10 @@ class StandingQuery:
     stage_consts: list[np.ndarray | None]
     result: object = None
     result_version: int = 0
+    # "eager" while the last refresh fell back to the host engine after a
+    # recoverable device fault; cleared by the next successful compiled
+    # root recompute
+    degraded_to: str | None = None
 
     @property
     def states_by_name(self) -> dict:
@@ -139,6 +144,10 @@ class StandingQueryEngine:
         self.stage_runs = 0
         self.stages_skipped = 0
         self.stages_recomputed = 0
+        # refreshes that fell back to the eager host engine after a
+        # recoverable fault — the result stays correct, the counter says
+        # the compiled path needs attention
+        self.degraded_refreshes = 0
 
     # ---- intake -------------------------------------------------------
     def register(
@@ -254,14 +263,24 @@ class StandingQueryEngine:
                 self.stages_skipped += 1
                 continue
             self.stages_recomputed += 1
-            data = self._stage_data(plan, stage_names, rels, runner, states_by_name)
-            out = runner(data, sq.stage_consts[i])
+            try:
+                data = self._stage_data(plan, stage_names, rels, runner, states_by_name)
+                out = runner(data, sq.stage_consts[i])
+            except Exception as e:
+                # a standing query has no co-batched tenants to protect, so
+                # a runtime capacity quota degrades like any device fault:
+                # answer from the eager host engine, keep the result live
+                if not (faults.recoverable(e) or isinstance(e, CapacityQuotaError)):
+                    raise
+                self._recover_eager(sq)
+                return True
             if is_root:
                 if sq.template.agg == "count":
                     sq.result = int(jax.device_get(out))
                 else:
                     sq.result = materialize_compiled(*out)
                 sq.result_version += 1
+                sq.degraded_to = None
                 root_changed = True
             else:
                 state.out = out
@@ -269,6 +288,25 @@ class StandingQueryEngine:
             state.fingerprint = fp
             state.runs += 1
         return root_changed
+
+    def _recover_eager(self, sq: StandingQuery) -> None:
+        """Fault recovery: answer the query on the eager host engine over
+        live-row snapshots and invalidate every cached stage state, so the
+        next refresh rebuilds the compiled pipeline from scratch (clearing
+        `degraded_to` if it succeeds)."""
+        t = sq.template
+        filters = {v: int(c) for v, c in zip(t.filter_vars, sq.consts)}
+        tree = t.plan_tree if isinstance(t.plan_tree, BinaryPlan) else None
+        rels = {a: relcache.live_relation(r) for a, r in t.relations.items()}
+        out = free_join(t.query, rels, tree, agg=t.agg, filters=filters or None)
+        sq.result = int(out) if t.agg == "count" else out
+        sq.result_version += 1
+        sq.degraded_to = "eager"
+        self.degraded_refreshes += 1
+        for state in sq.states:
+            state.fingerprint = None
+            state.out = None
+            state.tries = {}
 
     def _stage_fp(self, plan, stage_names, rels, states_by_name):
         """One stage's input fingerprint: upstream stages by run counter,

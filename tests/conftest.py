@@ -10,6 +10,11 @@ def pytest_configure(config):
         "slow: heavyweight model/train/serve tests, deselected by default "
         '(run them with -m slow, or everything with -m "slow or not slow")',
     )
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injection resilience tests (selected by default; CI "
+        "also runs them standalone with -m chaos)",
+    )
 
 
 def pytest_collection_modifyitems(config, items):

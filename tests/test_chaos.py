@@ -1,0 +1,318 @@
+"""Chaos suite: deterministic fault injection against the serving stack.
+
+The contract under test (the resilience acceptance bar): under injected
+faults, JoinServeEngine.step() completes every admitted request —
+possibly degraded, never crashed — per-tenant quotas hold (an eviction
+storm is charged to its offender, co-batched compliant tenants never
+pay), StandingQueryEngine recovers to match the eager oracle, and with a
+budget set the memory governor's governed bytes never exceed it.
+
+Every fault here is armed through core.faults.inject: no randomness, no
+real device pressure, each test reproducible bit-for-bit. CI runs this
+file standalone as the `chaos` job (-m chaos) and asserts the recovery
+counters in the job summary via `python -m repro.core.faults`.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import compiled_free_join, faults, free_join, membudget, relcache
+from repro.core.membudget import MemoryBudgetError
+from repro.relational.relation import Relation
+from repro.relational.schema import triangle_query
+from repro.serve import (
+    AdmissionController,
+    JoinServeEngine,
+    QueryQuota,
+    StandingQueryEngine,
+)
+
+pytestmark = pytest.mark.chaos
+
+
+def _triangle(seed=0, n=400, dom=8):
+    rng = np.random.default_rng(seed)
+    q = triangle_query()
+    rels = {
+        a.alias: Relation(a.alias, {v: rng.integers(0, dom, n) for v in a.vars})
+        for a in q.atoms
+    }
+    return q, rels
+
+
+def _fast(eng):
+    eng.backoff_base_ms = 0.0  # keep chaos rounds instant
+    return eng
+
+
+def _oracle(q, rels, c):
+    return free_join(q, rels, agg="count", filters={"x": c})
+
+
+# ---- the degradation ladder --------------------------------------------
+
+
+def test_compile_fail_degrades_to_halved_batch(rng):
+    q, rels = _triangle()
+    eng = _fast(JoinServeEngine(slots=2))
+    with faults.inject("compile_fail", times=1) as f:
+        reqs = [eng.submit(q, rels, {"x": c}) for c in (2, 5)]
+        eng.run()
+    assert f.fired == 1
+    assert eng.faults_absorbed == 1
+    for req, c in zip(reqs, (2, 5)):
+        assert req.done and req.error is None
+        assert req.result == _oracle(q, rels, c)
+        assert req.degraded_to == "halved"
+    assert eng.degraded["halved"] == 2
+
+
+def test_repeated_compile_fail_walks_every_rung_to_eager(rng):
+    """Three consecutive compile failures exhaust full-width, halved, and
+    unbatched compiles; the eager host rung still answers correctly."""
+    q, rels = _triangle(seed=1)
+    eng = _fast(JoinServeEngine(slots=2))
+    with faults.inject("compile_fail", times=3) as f:
+        reqs = [eng.submit(q, rels, {"x": c}) for c in (1, 4)]
+        eng.run()
+    assert f.fired == 3
+    for req, c in zip(reqs, (1, 4)):
+        assert req.done and req.error is None
+        assert req.result == _oracle(q, rels, c)
+        assert req.degraded_to == "eager"
+    assert eng.degraded["eager"] == 2
+    assert eng.faults_absorbed >= 3
+
+
+def test_device_oom_at_dispatch_degrades_not_crashes(rng):
+    q, rels = _triangle(seed=2)
+    eng = _fast(JoinServeEngine(slots=2))
+    with faults.inject("device_oom", times=1) as f:
+        reqs = [eng.submit(q, rels, {"x": c}) for c in (3, 6)]
+        eng.run()
+    assert f.fired == 1
+    for req, c in zip(reqs, (3, 6)):
+        assert req.done and req.error is None
+        assert req.result == _oracle(q, rels, c)
+        assert req.degraded_to is not None
+
+
+def test_governor_shed_feeds_the_ladder(rng):
+    """A MemoryBudgetError raised by adaptive growth is recoverable: the
+    ladder absorbs it like any device fault."""
+    assert faults.recoverable(MemoryBudgetError(10, 0, 5))
+    assert not faults.recoverable(ValueError("nope"))
+
+
+def test_unrecoverable_errors_still_propagate(rng):
+    """The ladder must not become an exception sponge: a plain bug in the
+    dispatch path surfaces to the caller."""
+    q, rels = _triangle(seed=3)
+    eng = _fast(JoinServeEngine(slots=2))
+    eng.submit(q, rels, {"x": 2})
+
+    def boom(*a, **k):
+        raise ValueError("genuine bug")
+
+    eng._dispatch_batched = boom
+    with pytest.raises(ValueError, match="genuine bug"):
+        eng.step()
+
+
+# ---- overflow storms: offender isolation -------------------------------
+
+
+def test_eviction_storm_never_evicts_compliant_tenant(rng):
+    """N consecutive over-quota lanes from one tenant: each eviction is
+    charged to the offender, and the compliant co-batched tenant is
+    served the correct answer with an untouched budget."""
+    q, rels = _triangle(seed=4)
+    adm = AdmissionController(default=QueryQuota(max_retries=5))
+    eng = _fast(JoinServeEngine(slots=4, admission=adm))
+    evil = [eng.submit(q, rels, {"x": c}, tenant="evil") for c in (0, 1, 2)]
+    good = eng.submit(q, rels, {"x": 5}, tenant="good")
+    # the storm names lane 0 three times; evil's requests occupy the head
+    # lanes in submit order, so each firing evicts evil's next request
+    with faults.inject("overflow_storm", times=3, lanes=(0, 0, 0)) as f:
+        eng.run()
+    assert f.fired == 3
+    assert all(r.done and r.error is not None for r in evil)
+    assert good.done and good.error is None
+    assert good.result == _oracle(q, rels, 5)
+    assert good.degraded_to is None  # served on the fast path, not a rung
+    assert adm.rejected_by.get("evil") == 3
+    assert "good" not in adm.rejected_by
+
+
+def test_retry_budget_charged_to_offender_wholesale(rng):
+    """Once a tenant's evictions exceed its OWN max_retries, its remaining
+    queued requests are rejected wholesale (reason "retries") instead of
+    burning more dispatch rounds; the compliant tenant still completes."""
+    q, rels = _triangle(seed=5)
+    adm = AdmissionController(
+        default=QueryQuota(),
+        per_tenant={"evil": QueryQuota(max_retries=1)},
+    )
+    eng = _fast(JoinServeEngine(slots=4, admission=adm))
+    evil = [eng.submit(q, rels, {"x": c}, tenant="evil") for c in (0, 1, 2)]
+    good = eng.submit(q, rels, {"x": 5}, tenant="good")
+    with faults.inject("overflow_storm", times=2, lanes=(0, 0)) as f:
+        eng.run()
+    assert f.fired == 2
+    # 2 lane evictions + 1 wholesale rejection, all charged to evil
+    assert adm.rejected_by.get("evil") == 3
+    assert adm.rejected_reasons.get("retries", 0) >= 1
+    assert "good" not in adm.rejected_by
+    wholesale = [r for r in evil if getattr(r.error, "reason", None) == "retries"]
+    assert len(wholesale) == 1
+    assert good.done and good.error is None
+    assert good.result == _oracle(q, rels, 5)
+
+
+# ---- deadlines + slow dispatch -----------------------------------------
+
+
+def test_slow_dispatch_reaps_expired_deadline(rng):
+    q, rels = _triangle(seed=6)
+    eng = _fast(JoinServeEngine(slots=1))
+    r1 = eng.submit(q, rels, {"x": 2})
+    r2 = eng.submit(q, rels, {"x": 4}, deadline_ms=30.0)
+    with faults.inject("slow_dispatch", times=1, delay_s=0.2) as f:
+        eng.run()
+    assert f.fired == 1
+    assert r1.done and r1.error is None and r1.result == _oracle(q, rels, 2)
+    # r2 waited behind the injected stall past its deadline: rejected,
+    # never dispatched late
+    assert r2.done and getattr(r2.error, "reason", None) == "deadline"
+    assert eng.deadline_rejected == 1
+    assert eng.admission.rejected_reasons.get("deadline") == 1
+
+
+def test_generous_deadline_is_not_reaped(rng):
+    q, rels = _triangle(seed=7)
+    eng = _fast(JoinServeEngine(slots=2))
+    req = eng.submit(q, rels, {"x": 3}, deadline_ms=60_000.0)
+    eng.run()
+    assert req.done and req.error is None
+    assert req.result == _oracle(q, rels, 3)
+    assert eng.deadline_rejected == 0
+
+
+# ---- out-of-band mutation (version skew) -------------------------------
+
+
+def test_mutation_skew_counted_and_warned_once(rng):
+    q, rels = _triangle(seed=8, n=200)
+    r = rels["R"]
+    relcache.append(r, {v: np.asarray([1], r.columns[v].dtype) for v in r.schema})
+    before = relcache.oob_swaps()
+    relcache.reset_oob_warning()
+    with faults.inject("mutation_skew", rel=r), pytest.warns(
+        RuntimeWarning, match="out-of-band column swap"
+    ):
+        got = compiled_free_join(q, rels, agg="count")
+    assert got == free_join(q, {a: relcache.live_relation(x) for a, x in rels.items()},
+                            agg="count")
+    assert relcache.oob_swaps() == before + 1
+    # the warning is one-shot per process: a second skew only counts
+    relcache.append(r, {v: np.asarray([2], r.columns[v].dtype) for v in r.schema})
+    with faults.inject("mutation_skew", rel=r), warnings.catch_warnings():
+        warnings.simplefilter("error")
+        compiled_free_join(q, rels, agg="count")
+    assert relcache.oob_swaps() == before + 2
+
+
+def test_standing_query_recovers_eager_then_reconverges(rng):
+    """A device fault mid-refresh degrades the standing query to the eager
+    oracle (result still correct, degraded_to set); the next clean refresh
+    rebuilds the compiled pipeline and clears the flag."""
+    q, rels = _triangle(seed=9, n=300)
+    eng = StandingQueryEngine()
+    sq = eng.register(q, rels, {"x": 3})
+    oracle = lambda: free_join(  # noqa: E731
+        q, {a: relcache.live_relation(r) for a, r in rels.items()},
+        agg="count", filters={"x": 3},
+    )
+    assert sq.result == oracle() and sq.degraded_to is None
+    rng2 = np.random.default_rng(99)
+    delta = {v: rng2.integers(0, 8, 40) for v in rels["R"].schema}
+    with faults.inject("device_oom", times=1) as f:
+        relcache.append(rels["R"], delta)
+        eng.refresh()
+    assert f.fired == 1
+    assert eng.degraded_refreshes == 1
+    assert sq.degraded_to == "eager"
+    assert sq.result == oracle()
+    v_deg = sq.result_version
+    # clean refresh: the invalidated stages recompute on the compiled path
+    eng.refresh()
+    assert sq.degraded_to is None
+    assert sq.result == oracle()
+    assert sq.result_version > v_deg
+
+
+# ---- the memory governor under live load -------------------------------
+
+
+def test_governed_bytes_never_exceed_budget(rng):
+    """The tentpole invariant: with a budget set, the governed device
+    bytes stay under it across a stream of distinct workloads, and the
+    governor provably made room by evicting (not merely by shedding)."""
+    gov = membudget.GOVERNOR
+    gov.reset()
+    q, rels0 = _triangle(seed=20, n=800)
+    assert compiled_free_join(q, rels0, agg="count") == free_join(q, rels0, agg="count")
+    baseline = gov.live_bytes
+    assert baseline > 0, "the compiled path must report its buffers"
+    cap = int(baseline * 1.5)
+    ev0 = gov.evictions
+    with membudget.budget(cap):
+        assert gov.live_bytes <= cap
+        for seed in (21, 22, 23, 24):
+            qq, rr = _triangle(seed=seed, n=800)
+            assert compiled_free_join(qq, rr, agg="count") == free_join(
+                qq, rr, agg="count"
+            )
+            assert gov.live_bytes <= cap, f"budget breached on seed {seed}"
+    assert gov.evictions > ev0, "making room must have evicted cold entries"
+
+
+def test_oversized_single_workload_sheds_but_answers(rng):
+    """A budget smaller than one workload's buffers: everything sheds
+    (served uncached / degraded), nothing crashes, the invariant holds."""
+    gov = membudget.GOVERNOR
+    gov.reset()
+    q, rels = _triangle(seed=30, n=600)
+    sheds0 = gov.sheds
+    with membudget.budget(64):  # comically small
+        assert compiled_free_join(q, rels, agg="count") == free_join(
+            q, rels, agg="count"
+        )
+        assert gov.live_bytes <= 64
+    assert gov.sheds > sheds0
+
+
+# ---- mixed barrage ------------------------------------------------------
+
+
+def test_mixed_fault_barrage_completes_every_request(rng):
+    """Several fault kinds armed at once across a multi-tenant stream:
+    every admitted request completes (possibly degraded), every answer
+    matches the eager oracle."""
+    q, rels = _triangle(seed=40)
+    eng = _fast(JoinServeEngine(slots=2))
+    consts = [1, 2, 3, 4, 5, 6]
+    with faults.inject("compile_fail", times=1), faults.inject(
+        "device_oom", times=1
+    ), faults.inject("slow_dispatch", times=1, delay_s=0.001):
+        reqs = [
+            eng.submit(q, rels, {"x": c}, tenant=f"t{i % 3}")
+            for i, c in enumerate(consts)
+        ]
+        eng.run()
+    for req, c in zip(reqs, consts):
+        assert req.done and req.error is None
+        assert req.result == _oracle(q, rels, c)
+    assert eng.faults_absorbed >= 1
+    assert sum(eng.degraded.values()) >= 1

@@ -1,0 +1,125 @@
+"""MemoryGovernor unit tests: accounting arithmetic, LRU eviction order,
+admission shedding, owner-lifetime release, and budget scoping. The
+integration half — the governed caches never exceeding a live budget —
+lives in test_chaos.py with the rest of the resilience suite."""
+import gc
+
+import numpy as np
+import pytest
+
+from repro.core import membudget
+from repro.core.membudget import MemoryBudgetError, MemoryGovernor
+
+
+def test_bookkeeping_without_budget_never_refuses():
+    gov = MemoryGovernor()
+    gov.account("a", 100)
+    gov.account("b", 50)
+    assert gov.live_bytes == 150 and gov.peak_bytes == 150
+    gov.account("a", 30)  # resize down
+    assert gov.live_bytes == 80
+    gov.release("b")
+    assert gov.live_bytes == 30
+    assert gov.evictions == 0 and gov.sheds == 0
+    # huge entries are fine: no budget, no enforcement
+    gov.account("c", 1 << 60)
+    assert gov.peak_bytes == 30 + (1 << 60)
+
+
+def test_lru_eviction_order_and_callbacks():
+    dropped = []
+    gov = MemoryGovernor(budget_bytes=100)
+    for name, n in (("a", 40), ("b", 40), ("c", 20)):
+        gov.account(name, n, evict=lambda name=name: dropped.append(name))
+    # "a" is coldest; touching it promotes it, so "b" pays for "d"
+    gov.touch("a")
+    gov.account("d", 30, evict=lambda: dropped.append("d"))
+    assert dropped == ["b"]
+    assert gov.live_bytes == 40 + 20 + 30
+    assert gov.evictions == 1
+    # the evicted token is really gone: accounting it again is a fresh entry
+    gov.account("b", 10, evict=lambda: dropped.append("b2"))
+    assert gov.live_bytes == 100
+
+
+def test_shed_leaves_state_untouched():
+    gov = MemoryGovernor(budget_bytes=100)
+    gov.account("a", 60, evict=lambda: None)
+    with pytest.raises(MemoryBudgetError) as ei:
+        gov.account("whale", 200)
+    assert ei.value.budget == 100
+    assert gov.sheds == 1
+    assert "whale" not in gov._entries
+    # the resident entry was evicted trying to make room — that is the
+    # documented cost of a shed — but the governed total stays consistent
+    assert gov.live_bytes <= 100
+
+
+def test_growing_an_entry_never_evicts_itself():
+    gov = MemoryGovernor(budget_bytes=100)
+    gov.account("me", 60, evict=lambda: pytest.fail("self-eviction"))
+    # growth that fits once cold entries go: "other" is evicted, not "me"
+    gone = []
+    gov.account("other", 30, evict=lambda: gone.append("other"))
+    gov.account("me", 90)
+    assert gone == ["other"]
+    assert gov.live_bytes == 90
+    # growth that cannot fit even alone sheds, and the OLD size survives
+    with pytest.raises(MemoryBudgetError):
+        gov.account("me", 150)
+    assert gov._entries["me"][0] == 90 and gov.live_bytes == 90
+
+
+def test_owner_gc_releases_token():
+    gov = MemoryGovernor()
+
+    class Owner:
+        pass
+
+    o = Owner()
+    gov.account("t", 77, owner=o)
+    assert gov.live_bytes == 77
+    del o
+    gc.collect()
+    assert gov.live_bytes == 0 and "t" not in gov._entries
+
+
+def test_release_detaches_owner_finalizer():
+    gov = MemoryGovernor()
+
+    class Owner:
+        pass
+
+    o = Owner()
+    gov.account("t", 10, owner=o)
+    gov.release("t")
+    gov.account("t2", 5)
+    del o
+    gc.collect()  # the dead finalizer must not touch anything
+    assert gov.live_bytes == 5
+
+
+def test_set_budget_shrink_evicts_coldest_first():
+    gone = []
+    gov = MemoryGovernor()
+    for name in ("a", "b", "c"):
+        gov.account(name, 40, evict=lambda name=name: gone.append(name))
+    gov.set_budget(50)
+    assert gone == ["a", "b"]
+    assert gov.live_bytes == 40 and gov.budget == 50
+
+
+def test_budget_context_restores_previous():
+    gov = membudget.GOVERNOR
+    old = gov.budget
+    with membudget.budget(1 << 30) as g:
+        assert g is gov and gov.budget == 1 << 30
+    assert gov.budget == old
+
+
+def test_nbytes_walks_nested_structures():
+    a = np.zeros(10, np.int32)  # 40 bytes
+    assert membudget._nbytes(a) == 40
+    assert membudget._nbytes({"x": a, "y": [a, (a, a, None)]}) == 160
+    assert membudget._nbytes(None) == 0
+    assert membudget._nbytes(3) == 0  # scalars carry no .nbytes
